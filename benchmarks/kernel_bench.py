@@ -1,0 +1,65 @@
+"""Approx-matmul implementation comparison: paper-faithful LUT gather vs
+exact+low-rank-correction (XLA) vs exact-quant vs float, on CPU wall time.
+
+The absolute CPU numbers are not TPU projections; the point is (a) the LUT
+mechanical port is catastrophically slower at identical semantics, and
+(b) the lowrank path tracks the exact-quant path within the (1+F) factor.
+The TPU-projected numbers live in EXPERIMENTS.md §Perf (from the dry-run).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.approx import ApproxConfig, quantized_matmul
+
+
+def _time(fn, *args, iters=5):
+    jax.block_until_ready(fn(*args))   # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows = []
+    rng = np.random.default_rng(0)
+    M_, K_, N_ = 256, 512, 256
+    a = jnp.asarray(rng.integers(0, 256, (M_, K_)), jnp.uint8)
+    b = jnp.asarray(rng.integers(0, 256, (K_, N_)), jnp.uint8)
+    outs = {}
+    for mode in ("exact_quant", "lut", "lowrank"):
+        cfg = ApproxConfig(multiplier="mul8x8_2", mode=mode)
+        f = jax.jit(lambda a, b, c=cfg: quantized_matmul(a, b, c))
+        us = _time(f, a, b)
+        outs[mode] = np.asarray(f(a, b))
+        rows.append(
+            (f"kernel/{mode}_matmul_{M_}x{K_}x{N_}", us,
+             f"{2*M_*K_*N_/us/1e3:.2f} GFLOP/s-equiv")
+        )
+    # bit-exactness of lowrank vs lut at these sizes
+    match = bool(np.array_equal(outs["lut"], outs["lowrank"].astype(outs["lut"].dtype)))
+    rows.append(("kernel/lowrank_bitexact_vs_lut", 0.0, f"equal={match}"))
+
+    # range-pruned variant (co-optimized weights < 32): F=6 -> 3
+    bw = jnp.asarray(rng.integers(0, 32, (K_, N_)), jnp.uint8)
+    cfgp = ApproxConfig(multiplier="mul8x8_2", mode="lowrank", w_qmax=31)
+    fp = jax.jit(lambda a, b: quantized_matmul(a, b, cfgp))
+    us = _time(fp, a, bw)
+    rows.append((f"kernel/lowrank_pruned_matmul_{M_}x{K_}x{N_}", us, "F=3 (weights<32)"))
+
+    # Pallas kernel (interpret mode on CPU: correctness-representative only)
+    from repro.kernels.approx_matmul.ops import approx_matmul_pallas
+
+    fpal = jax.jit(
+        lambda a, b: approx_matmul_pallas(a, b, multiplier="mul8x8_2", interpret=True)
+    )
+    us = _time(fpal, a, b, iters=2)
+    ok = bool(np.array_equal(np.asarray(fpal(a, b)), outs["lut"]))
+    rows.append((f"kernel/pallas_interpret_{M_}x{K_}x{N_}", us, f"bitexact={ok}"))
+    return rows

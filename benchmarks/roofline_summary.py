@@ -1,0 +1,35 @@
+"""Summarize cached dry-run results (results/dryrun/*.json) as bench rows —
+the machine-readable companion of EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List, Tuple
+
+
+def run(out_dir: str = "results/dryrun") -> List[Tuple[str, float, str]]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        tag = os.path.basename(path)[:-5]
+        if d.get("skipped"):
+            rows.append((f"roofline/{tag}", 0.0, f"SKIPPED: {d['skipped']}"))
+            continue
+        if "t_compute_s" not in d:   # multi-pod compile-only proof cells
+            rows.append(
+                (f"roofline/{tag}", d.get("compile_s", 0) * 1e6,
+                 f"compile-only OK; temp/device {d.get('temp_size_in_bytes', 0)/1e9:.2f} GB")
+            )
+            continue
+        rows.append(
+            (f"roofline/{tag}", d.get("compile_s", 0) * 1e6,
+             f"compute {d['t_compute_s']:.4f}s memory {d['t_memory_s']:.4f}s "
+             f"collective {d['t_collective_s']:.4f}s -> {d['bound']}-bound; "
+             f"useful-flops {d.get('useful_flop_fraction', 0):.3f} "
+             f"roofline {d.get('roofline_fraction', 0):.4f}")
+        )
+    if not rows:
+        rows.append(("roofline/none", 0.0, "no dry-run results cached; run repro.launch.dryrun"))
+    return rows

@@ -1,0 +1,75 @@
+"""Paper Table VIII: DNN accuracy under approximate multipliers, with and
+without hardware-driven co-optimization (retraining).
+
+Offline container => deterministic synthetic MNIST/CIFAR-shaped datasets
+(data/synthetic.py). The protocol mirrors the paper: train float -> quantize
+with each multiplier -> measure DAL -> retrain (QAT fine-tune with the
+weight-band regularizer + the deeper LeNet+) -> measure recovery. VGG16/
+AlexNet/ResNet-19 run under --full (CPU minutes).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.approx import ApproxConfig
+from repro.core.metrics import dal
+from repro.data.synthetic import image_dataset
+from repro.models.cnn import cnn_forward, init_cnn
+
+KEY = jax.random.PRNGKey(0)
+MULTIPLIERS = ("mul8x8_1", "mul8x8_2", "mul8x8_3", "pkm")
+
+
+def _train(model, data, cfg, steps, lr=0.05, bs=64):
+    def loss_fn(layers, x, y):
+        logits = cnn_forward(dict(model, layers=layers), x, cfg)
+        return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * jax.nn.one_hot(y, 10), -1))
+
+    @jax.jit
+    def step(layers, x, y):
+        l, g = jax.value_and_grad(loss_fn)(layers, x, y)
+        return jax.tree.map(lambda p, gr: p - lr * gr, layers, g), l
+
+    layers = model["layers"]
+    n = data.x_train.shape[0]
+    for i in range(steps):
+        j = (i * bs) % (n - bs)
+        layers, _ = step(layers, jnp.asarray(data.x_train[j:j+bs]), jnp.asarray(data.y_train[j:j+bs]))
+    return dict(model, layers=layers)
+
+
+def _acc(model, data, cfg, n=256):
+    logits = cnn_forward(model, jnp.asarray(data.x_test[:n]), cfg)
+    return float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(data.y_test[:n])))
+
+
+def run(full: bool = False) -> List[Tuple[str, float, str]]:
+    rows = []
+    nets = [("lenet", "mnist"), ("lenet_plus", "mnist"), ("lenet", "cifar10"), ("lenet_plus", "cifar10")]
+    if full:
+        nets += [("alexnet", "cifar10"), ("vgg16", "cifar10"), ("resnet19", "cifar10")]
+    steps = 120 if not full else 300
+    for net, ds in nets:
+        t0 = time.perf_counter()
+        data = image_dataset(ds, n_train=1024, n_test=256, seed=0)
+        shape = (28, 28, 1) if ds == "mnist" else (32, 32, 3)
+        model = init_cnn(net, KEY, in_shape=shape)
+        fl = ApproxConfig(mode="float")
+        model = _train(model, data, fl, steps)
+        acc0 = _acc(model, data, fl)
+        parts = [f"exact={acc0:.3f}"]
+        for mname in MULTIPLIERS:
+            mode = "lowrank" if mname.startswith("mul8x8") else "lut"
+            acfg = ApproxConfig(multiplier=mname, mode=mode)
+            a = _acc(model, data, acfg)
+            # co-optimization: short QAT fine-tune under the approximate fwd
+            retrained = _train(dict(model), data, acfg, steps=30, lr=0.01)
+            a_re = _acc(retrained, data, acfg)
+            parts.append(f"{mname}={a:.3f}->retrain {a_re:.3f} (DAL {dal(acc0, a_re):+.3f})")
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"table_viii/{net}-{ds}", us, "; ".join(parts)))
+    return rows

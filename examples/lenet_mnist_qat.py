@@ -1,0 +1,99 @@
+"""End-to-end driver #1 (the paper's own experiment): train LeNet on
+(synthetic) MNIST, measure the DNN-accuracy-loss (DAL) of each approximate
+multiplier, then apply the hardware-driven co-optimization — QAT retraining
+with the weight-band regularizer — and measure the recovery. Checkpoints and
+restarts are exercised along the way.
+
+    PYTHONPATH=src python examples/lenet_mnist_qat.py [--steps 150] [--net lenet_plus]
+"""
+import argparse
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.approx import ApproxConfig
+from repro.core.metrics import dal
+from repro.data.synthetic import image_dataset
+from repro.models.cnn import cnn_forward, init_cnn
+from repro.quant.affine import calibrate
+from repro.quant.qat import band_regularizer
+from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+
+
+def make_step(model_defs, cfg, lr, band_reg=0.0):
+    def loss_fn(layers, x, y):
+        logits = cnn_forward({"defs": model_defs, "layers": layers}, x, cfg)
+        ce = -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * jax.nn.one_hot(y, 10), -1))
+        reg = 0.0
+        if band_reg > 0:
+            for p in jax.tree.leaves(layers):
+                if p.ndim >= 2:
+                    qp = calibrate(p, axis=(p.ndim - 2,), qmax=255)
+                    reg = reg + band_regularizer(p, qp, band=(0, 31))
+        return ce + band_reg * reg
+
+    @jax.jit
+    def step(layers, x, y):
+        l, g = jax.value_and_grad(loss_fn)(layers, x, y)
+        return jax.tree.map(lambda p, gr: p - lr * gr, layers, g), l
+
+    return step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--net", default="lenet", choices=["lenet", "lenet_plus"])
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--retrain-steps", type=int, default=40)
+    ap.add_argument("--bs", type=int, default=64)
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    data = image_dataset("mnist", n_train=2048, n_test=512, seed=0)
+    model = init_cnn(args.net, jax.random.PRNGKey(0), in_shape=(28, 28, 1))
+    fl = ApproxConfig(mode="float")
+    step = make_step(model["defs"], fl, lr=0.05)
+
+    ckpt_dir = args.ckpt or os.path.join(tempfile.gettempdir(), "lenet_qat_ckpt")
+    layers, n = model["layers"], data.x_train.shape[0]
+    for i in range(args.steps):
+        j = (i * args.bs) % (n - args.bs)
+        layers, loss = step(layers, jnp.asarray(data.x_train[j:j+args.bs]),
+                            jnp.asarray(data.y_train[j:j+args.bs]))
+        if i % 50 == 49:
+            save_checkpoint(ckpt_dir, i + 1, {"layers": layers}, keep=2)
+            print(f"step {i+1}: loss {float(loss):.4f} (checkpointed)")
+    model["layers"] = layers
+
+    def acc(cfg, layers=None):
+        m = dict(model, layers=layers if layers is not None else model["layers"])
+        logits = cnn_forward(m, jnp.asarray(data.x_test), cfg)
+        return float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(data.y_test)))
+
+    acc0 = acc(fl)
+    print(f"\nfloat accuracy: {acc0:.4f}")
+    print(f"{'multiplier':12s} {'acc':>7s} {'DAL':>8s} {'retrained':>10s} {'DAL':>8s}")
+    for mult in ("exact", "mul8x8_1", "mul8x8_2", "mul8x8_3", "pkm"):
+        mode = "exact_quant" if mult == "exact" else ("lowrank" if mult.startswith("mul8x8") else "lut")
+        acfg = ApproxConfig(multiplier=mult, mode=mode)
+        a = acc(acfg)
+        # co-optimization: QAT fine-tune under approximate forward, with the
+        # band regularizer pushing weight codes into (0,31) (enables MUL8x8_3)
+        qstep = make_step(model["defs"], acfg, lr=0.01, band_reg=1e-3)
+        lyr = model["layers"]
+        for i in range(args.retrain_steps):
+            j = (i * args.bs) % (n - args.bs)
+            lyr, _ = qstep(lyr, jnp.asarray(data.x_train[j:j+args.bs]),
+                           jnp.asarray(data.y_train[j:j+args.bs]))
+        a_re = acc(acfg, lyr)
+        print(f"{mult:12s} {a:7.4f} {dal(acc0, a):+8.4f} {a_re:10.4f} {dal(acc0, a_re):+8.4f}")
+
+    # restart path: restore the float checkpoint (fault-tolerance exercise)
+    restored, s = restore_checkpoint(ckpt_dir, {"layers": jax.eval_shape(lambda: layers)})
+    print(f"\nrestored checkpoint at step {s}: accuracy {acc(fl, restored['layers']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: run the hypothesis->change->measure iterations on
+the three selected cells and log every variant to results/perf/.
+
+Each variant re-lowers the cell through the same dry-run machinery, so the
+before/after roofline terms are directly comparable. See EXPERIMENTS.md §Perf
+for the narrative (hypothesis + napkin math + confirmed/refuted).
+"""
+import json
+import sys
+import time
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.dryrun import run_cell  # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "results", "perf")
+
+# (tag, arch, shape, kwargs)
+VARIANTS = [
+    # ---- Cell A: granite-3-2b x train_4k (technique-representative) -------
+    ("A0_paper_lut", "granite-3-2b", "train_4k", dict(approx_mode="lut")),
+    ("A1_lowrank", "granite-3-2b", "train_4k", dict(approx_mode="lowrank")),
+    ("A2_fused", "granite-3-2b", "train_4k",
+     dict(approx_mode="lowrank", cfg_overrides=dict(fuse_qkv=True, fuse_gate_up=True))),
+    ("A3_fused_w31", "granite-3-2b", "train_4k",
+     dict(approx_mode="lowrank", w_qmax=31,
+          cfg_overrides=dict(fuse_qkv=True, fuse_gate_up=True))),
+    ("A4_fused_w31_bf16p", "granite-3-2b", "train_4k",
+     dict(approx_mode="lowrank", w_qmax=31,
+          cfg_overrides=dict(fuse_qkv=True, fuse_gate_up=True, param_dtype="bfloat16"))),
+    ("A5_ref_exact_quant", "granite-3-2b", "train_4k", dict(approx_mode="exact_quant")),
+    ("A6_ref_float", "granite-3-2b", "train_4k", dict(approx_mode="float")),
+    # ---- Cell B: most collective-bound (set after baseline table) ----------
+    ("B0_base", "yi-34b", "train_4k", dict(approx_mode="lowrank")),
+    ("B1_bf16_params", "yi-34b", "train_4k",
+     dict(approx_mode="lowrank", cfg_overrides=dict(param_dtype="bfloat16"))),
+    ("B2_bf16_fused_w31", "yi-34b", "train_4k",
+     dict(approx_mode="lowrank", w_qmax=31,
+          cfg_overrides=dict(param_dtype="bfloat16", fuse_qkv=True, fuse_gate_up=True))),
+    ("B3_bf16_fused_w31_mb_half", "yi-34b", "train_4k",
+     dict(approx_mode="lowrank", w_qmax=31, microbatch_override=8,
+          cfg_overrides=dict(param_dtype="bfloat16", fuse_qkv=True, fuse_gate_up=True))),
+    # ---- Cell C: worst roofline fraction (decode) ---------------------------
+    ("C0_base", "granite-3-2b", "decode_32k", dict(approx_mode="lowrank")),
+    ("C1_frozen", "granite-3-2b", "decode_32k",
+     dict(approx_mode="lowrank", frozen_weights=True)),
+    ("C2_frozen_fused", "granite-3-2b", "decode_32k",
+     dict(approx_mode="lowrank", frozen_weights=True,
+          cfg_overrides=dict(fuse_qkv=True, fuse_gate_up=True))),
+    ("C3_frozen_fused_w31", "granite-3-2b", "decode_32k",
+     dict(approx_mode="lowrank", frozen_weights=True, w_qmax=31,
+          cfg_overrides=dict(fuse_qkv=True, fuse_gate_up=True))),
+    # C4: keep the KV cache sequence-sharded during decode when KV heads
+    # don't divide the TP axis (attention_core decode branch)
+    ("C4_sp_cache_frozen_fused_w31", "granite-3-2b", "decode_32k",
+     dict(approx_mode="lowrank", frozen_weights=True, w_qmax=31,
+          cfg_overrides=dict(fuse_qkv=True, fuse_gate_up=True))),
+]
+
+
+def main():
+    os.makedirs(OUT, exist_ok=True)
+    only = sys.argv[1:] or None
+    for tag, arch, shape, kw in VARIANTS:
+        if only and not any(tag.startswith(o) for o in only):
+            continue
+        path = os.path.join(OUT, f"{tag}.json")
+        if os.path.exists(path):
+            print("cached:", tag)
+            continue
+        print(f"=== {tag}: {arch} x {shape} {kw} ===", flush=True)
+        t0 = time.time()
+        try:
+            res = run_cell(arch, shape, multi_pod=False, print_analysis=True, **kw)
+            res["tag"] = tag
+            res["variant_kwargs"] = {k: str(v) for k, v in kw.items()}
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            res = {"tag": tag, "arch": arch, "shape": shape, "error": repr(e),
+                   "wall_s": time.time() - t0,
+                   "variant_kwargs": {k: str(v) for k, v in kw.items()}}
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        print(f"    -> {path} ({time.time()-t0:.0f}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()
+
+# appended: C4 — decode SP-cache fix (see attention_core decode branch)

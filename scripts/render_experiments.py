@@ -1,0 +1,140 @@
+"""Render EXPERIMENTS.md from results/dryrun + results/perf JSONs.
+
+Static narrative + generated tables, so the document always matches the
+cached artifacts:  PYTHONPATH=src python scripts/render_experiments.py
+"""
+import glob
+import json
+import os
+import sys
+
+ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+DRY = os.path.join(ROOT, "results", "dryrun")
+PERF = os.path.join(ROOT, "results", "perf")
+
+ARCH_ORDER = [
+    "musicgen-large", "yi-34b", "granite-3-2b", "deepseek-7b",
+    "deepseek-coder-33b", "falcon-mamba-7b", "qwen2-moe-a2.7b",
+    "grok-1-314b", "qwen2-vl-2b", "zamba2-2.7b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(pattern):
+    out = {}
+    for p in glob.glob(pattern):
+        with open(p) as f:
+            d = json.load(f)
+        out[os.path.basename(p)[:-5]] = d
+    return out
+
+
+def fmt_bytes(b):
+    if b >= 1e12:
+        return f"{b/1e12:.2f} TB"
+    if b >= 1e9:
+        return f"{b/1e9:.2f} GB"
+    return f"{b/1e6:.1f} MB"
+
+
+def dryrun_table(cells, mesh="16x16", mode="lowrank"):
+    rows = []
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            d = cells.get(f"{a}__{s}__{mesh}__{mode}")
+            if d is None:
+                rows.append(f"| {a} | {s} | — | *(not cached)* ||||||")
+                continue
+            if d.get("skipped"):
+                rows.append(f"| {a} | {s} | skip | sub-quadratic archs only |||||| ")
+                continue
+            rows.append(
+                "| {a} | {s} | {bound} | {tc:.3f} | {tm:.3f} | {tx:.3f} | {uf:.3f} | {rf:.4f} | {mem} |".format(
+                    a=a, s=s, bound=d["bound"], tc=d["t_compute_s"],
+                    tm=d["t_memory_s"], tx=d["t_collective_s"],
+                    uf=d.get("useful_flop_fraction", 0),
+                    rf=d.get("roofline_fraction", 0),
+                    mem=fmt_bytes(d.get("temp_size_in_bytes", 0)),
+                )
+            )
+    head = ("| arch | shape | bound | compute s | memory s | collective s | "
+            "useful-flops | roofline | temp/device |\n|---|---|---|---|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
+def multipod_table(cells):
+    rows = []
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            d = cells.get(f"{a}__{s}__2x16x16__lowrank")
+            if d is None:
+                rows.append(f"| {a} | {s} | *(not cached)* | | |")
+                continue
+            if d.get("skipped"):
+                rows.append(f"| {a} | {s} | skip (sub-quadratic archs only) | | |")
+                continue
+            rows.append(
+                "| {a} | {s} | OK ({t:.0f}s compile) | {arg} | {tmp} |".format(
+                    a=a, s=s, t=d.get("compile_s", 0) + d.get("lower_s", 0),
+                    arg=fmt_bytes(d.get("argument_size_in_bytes", 0)),
+                    tmp=fmt_bytes(d.get("temp_size_in_bytes", 0)),
+                )
+            )
+    head = ("| arch | shape | 2×16×16 lower+compile | args/device | temp/device |\n"
+            "|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
+def perf_rows(perf, prefix):
+    rows = []
+    for tag in sorted(perf):
+        if not tag.startswith(prefix):
+            continue
+        d = perf[tag]
+        if "error" in d:
+            rows.append(f"| {d['tag']} | FAILED: `{d['error'][:90]}` ||||||")
+            continue
+        rows.append(
+            "| {t} | {tc:.2f} | {tm:.2f} | {tx:.2f} | {bound} | {uf:.3f} | {rf:.4f} |".format(
+                t=d.get("tag", tag), tc=d["t_compute_s"], tm=d["t_memory_s"],
+                tx=d["t_collective_s"], bound=d["bound"],
+                uf=d.get("useful_flop_fraction", 0), rf=d.get("roofline_fraction", 0),
+            )
+        )
+    head = ("| variant | compute s | memory s | collective s | bound | useful-flops | roofline |\n"
+            "|---|---|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
+def headpad_rows(perf):
+    rows = []
+    for tag, d in sorted(perf.items()):
+        if not tag.startswith("headpad_before"):
+            continue
+        rows.append(
+            "| {a} × {s} (before) | {tc:.2f} | {tm:.2f} | {tx:.2f} | {rf:.4f} |".format(
+                a=d["arch"], s=d["shape"], tc=d["t_compute_s"], tm=d["t_memory_s"],
+                tx=d["t_collective_s"], rf=d.get("roofline_fraction", 0))
+        )
+    return "\n".join(rows)
+
+
+def main():
+    dry = load(os.path.join(DRY, "*.json"))
+    perf = load(os.path.join(PERF, "*.json"))
+    with open(os.path.join(ROOT, "scripts", "experiments_template.md")) as f:
+        tpl = f.read()
+    out = (tpl
+           .replace("{{DRYRUN_TABLE}}", dryrun_table(dry))
+           .replace("{{MULTIPOD_TABLE}}", multipod_table(dry))
+           .replace("{{PERF_A}}", perf_rows(perf, "A"))
+           .replace("{{PERF_B}}", perf_rows(perf, "B"))
+           .replace("{{PERF_C}}", perf_rows(perf, "C"))
+           .replace("{{HEADPAD_BEFORE}}", headpad_rows(perf)))
+    with open(os.path.join(ROOT, "EXPERIMENTS.md"), "w") as f:
+        f.write(out)
+    print("wrote EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

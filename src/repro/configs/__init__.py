@@ -1,0 +1,19 @@
+from repro.configs.base import (
+    ARCH_REGISTRY,
+    ModelConfig,
+    ShapeConfig,
+    SHAPES,
+    get_config,
+    list_archs,
+    reduced_config,
+)
+
+__all__ = [
+    "ModelConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "ARCH_REGISTRY",
+    "get_config",
+    "list_archs",
+    "reduced_config",
+]

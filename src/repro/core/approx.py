@@ -1,0 +1,291 @@
+"""ApproxConfig — the framework-level switch for the paper's technique.
+
+Every matmul-bearing layer in the model zoo routes through
+``approx_dense`` below; the config selects the multiplier, the simulation
+mode (paper-faithful LUT vs TPU-native low-rank vs the Pallas kernel), the
+quantization bands, and the co-optimization range profile.
+
+Simulation modes (all bit-exact to the multiplier LUT semantics):
+  float       no quantization at all (fp baseline)
+  exact_quant uint8 affine quantization with an exact integer matmul
+  lut         paper-faithful LUT-gather simulation (the reference/baseline)
+  lowrank     exact MXU form: A@B - U(A)@V(B)   (see core/lowrank.py)
+  pallas      fused Pallas TPU kernel of the lowrank form
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lowrank as lr
+from repro.core import multipliers as mul
+from repro.quant.affine import QuantParams, calibrate, dequantize, quantize
+
+__all__ = [
+    "ApproxConfig",
+    "approx_dense",
+    "quantized_matmul",
+    "QWeight",
+    "prequantize_tree",
+]
+
+Modes = ("float", "exact_quant", "lut", "lowrank", "pallas")
+
+
+@dataclasses.dataclass(frozen=True)
+class ApproxConfig:
+    """Static (hashable) configuration of the approximate-multiplier feature."""
+
+    multiplier: str = "mul8x8_2"       # exact | mul8x8_1/2/3 | pkm | etm
+    mode: str = "lowrank"              # one of Modes
+    act_qmax: int = 255                # activation code band (paper: inputs in (0,31) -> 31)
+    w_qmax: int = 255                  # weight code band (co-optimized: 31)
+    w_per_channel: bool = True         # per-output-channel weight scales
+    band_reg: float = 0.0              # weight band-regularizer strength (retraining)
+
+    def __post_init__(self):
+        if self.mode not in Modes:
+            raise ValueError(f"mode {self.mode!r} not in {Modes}")
+        if self.mode in ("lut", "lowrank", "pallas"):
+            mul.mul8x8_table(self.multiplier)  # validate name
+
+    @property
+    def is_quantized(self) -> bool:
+        return self.mode != "float"
+
+
+# Default config used by model constructors unless overridden.
+FLOAT = ApproxConfig(mode="float")
+
+
+@functools.lru_cache(maxsize=None)
+def _correction(multiplier: str, lhs_max: int, rhs_max: int) -> lr.LowRankCorrection:
+    """Cached factorization with indicator features on the rhs (weights) side
+    — weights are static at inference so u(W) precomputes, and the paper's
+    co-optimized weight band (0,31) prunes rhs rows hardest."""
+    return lr.build_correction(multiplier, side="rhs", lhs_max=lhs_max, rhs_max=rhs_max)
+
+
+def quantized_matmul(
+    a_codes: jax.Array,
+    b_codes: jax.Array,
+    cfg: ApproxConfig,
+) -> jax.Array:
+    """Integer matmul of uint8 codes under the configured multiplier semantics.
+
+    a_codes: (..., M, K) int32 in [0, act_qmax]; b_codes: (K, N) int32 in
+    [0, w_qmax].  Returns (..., M, N) int32 equal (bit-exactly) to
+    ``sum_k LUT[a, b]``.
+    """
+    if cfg.mode == "exact_quant" or cfg.multiplier == "exact":
+        return _int_dot(a_codes, b_codes)
+    if cfg.mode == "lut":
+        from repro.kernels.approx_matmul.ref import approx_matmul_ref
+
+        lut = jnp.asarray(mul.mul8x8_table(cfg.multiplier))
+        return approx_matmul_ref(a_codes, b_codes, lut)
+    if cfg.mode == "lowrank":
+        return _lowrank_matmul(a_codes, b_codes, cfg)
+    if cfg.mode == "pallas":
+        from repro.kernels.approx_matmul.ops import approx_matmul_pallas
+
+        return approx_matmul_pallas(
+            a_codes,
+            b_codes,
+            multiplier=cfg.multiplier,
+            lhs_max=cfg.act_qmax,
+            rhs_max=cfg.w_qmax,
+        )
+    raise ValueError(cfg.mode)
+
+
+def _int_dot(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Exact integer matmul (int32 accumulation), MXU int8-friendly on TPU."""
+    return jax.lax.dot_general(
+        a.astype(jnp.int32),
+        b.astype(jnp.int32),
+        (((a.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def _bf16_dot(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Code matmul in MXU-native bf16 with f32 accumulation. uint8 codes and
+    all phi/psi table values are bf16-exact (<= 8 significant bits, verified
+    in tests), so each product is exact; accumulation is f32 (exact below
+    2^24 per reduction — the Pallas kernel's int32-tiled path is the fully
+    bit-exact production route; see kernels/approx_matmul)."""
+    return jax.lax.dot_general(
+        a.astype(jnp.bfloat16),
+        b.astype(jnp.bfloat16),
+        (((a.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _lowrank_matmul(a_codes: jax.Array, b_codes: jax.Array, cfg: ApproxConfig) -> jax.Array:
+    """approx = A@B - sum_f v_f(A) @ u_f(B): (1+F) MXU dots.
+
+    Feature maps are pure shift/mask/compare ops on the uint8 codes (no
+    gathers, no (M,K,F) materialization — one (M,K)/(K,N) bf16 transient per
+    dot; all table values are bf16-exact, see tests/test_lowrank.py)."""
+    corr = _correction(cfg.multiplier, cfg.act_qmax, cfg.w_qmax)
+    out = _bf16_dot(a_codes, b_codes)
+    for f in corr.features:
+        va = lr.v_map_jnp(a_codes, f.v_terms)                     # lhs tables
+        ub = lr.u_map_jnp(b_codes, f.kind, f.u_shift, f.u_bits, f.residue)
+        out = out - _bf16_dot(va, ub)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Frozen pre-quantized weights (serving path)
+# ---------------------------------------------------------------------------
+
+
+class QWeight(NamedTuple):
+    """A weight matrix frozen to uint8 codes at load time. Serving reads 1
+    byte/element instead of 4 (f32 master) and skips per-step calibration —
+    the weight-side precompute of DESIGN.md §7."""
+
+    codes: jax.Array        # (K, N) uint8
+    scale: jax.Array        # per-channel (1, N) or scalar, f32
+    zero_point: jax.Array   # int32, same shape as scale
+    col_sum: jax.Array      # (1, N) f32: sum_k codes (precomputed zp term)
+
+
+_PREQUANT_LEAVES = (
+    ".wq", ".wk", ".wv", ".wo",
+    ".w_gate", ".w_up", ".w_down",
+    "shared_gate", "shared_up", "shared_down",
+    ".in_proj", ".x_proj", ".dt_proj", ".out_proj",
+    "['lm_head']",
+)
+
+
+def w_dim(w, i: int) -> int:
+    """Shape accessor that works for float weights and frozen QWeights."""
+    return (w.codes if isinstance(w, QWeight) else w).shape[i]
+
+
+def concat_weights(ws, axis: int = 1):
+    """Concatenate weights along the output-channel axis; QWeights stay
+    frozen (per-channel scales concatenate losslessly)."""
+    if any(isinstance(w, QWeight) for w in ws):
+        assert all(isinstance(w, QWeight) for w in ws), "mixed frozen/float concat"
+        return QWeight(
+            codes=jnp.concatenate([w.codes for w in ws], axis=axis),
+            scale=jnp.concatenate([jnp.broadcast_to(w.scale, (1, w_dim(w, -1))) for w in ws], axis=-1),
+            zero_point=jnp.concatenate(
+                [jnp.broadcast_to(w.zero_point, (1, w_dim(w, -1))) for w in ws], axis=-1
+            ),
+            col_sum=jnp.concatenate([w.col_sum for w in ws], axis=-1),
+        )
+    return jnp.concatenate(ws, axis=axis)
+
+
+def prequantize_tree(params, cfg: "ApproxConfig"):
+    """Freeze every matmul weight to a QWeight (embeddings, norms, convs and
+    the MoE router stay float)."""
+
+    def one(path, leaf):
+        ks = jax.tree_util.keystr(path)
+        if leaf.ndim >= 2 and any(ks.endswith(s) or s in ks for s in _PREQUANT_LEAVES):
+            qp = calibrate(leaf, axis=(leaf.ndim - 2,) if cfg.w_per_channel else None,
+                           qmax=cfg.w_qmax)
+            codes = quantize(leaf, qp)
+            return QWeight(
+                codes=codes,
+                scale=qp.scale,
+                zero_point=qp.zero_point,
+                col_sum=jnp.sum(codes, axis=-2, keepdims=True, dtype=jnp.float32),
+            )
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# ---------------------------------------------------------------------------
+# Real-valued dense layer with approximate-multiplier semantics + QAT STE
+# ---------------------------------------------------------------------------
+
+
+def approx_dense(x: jax.Array, w: jax.Array, cfg: ApproxConfig) -> jax.Array:
+    """y = x @ w computed through the approximate-multiplier pipeline.
+
+    x: (..., K) float; w: (K, N) float.  Forward quantizes both operands to
+    unsigned codes (dynamic per-tensor activation scale, per-channel weight
+    scales), runs the configured integer multiplier simulation, applies the
+    standard zero-point corrections, and dequantizes.
+
+    The QAT straight-through estimator is expressed with ``stop_gradient``
+    algebra instead of ``custom_vjp``:
+
+        y = y_lin + stop_grad(y_int - y_lin),   y_lin = fq(x) @ fq(w)
+
+    so the forward VALUE is the bit-faithful integer simulation while the
+    gradient flows through the differentiable fake-quantized matmul. Zero
+    custom_vjp keeps the whole layer transparent to remat/scan/vmap — this
+    is what lets 60-layer scan-with-checkpoint models keep per-layer
+    residuals at one bf16 carry instead of stacked f32 custom_vjp residuals.
+
+    ``w`` may be a frozen ``QWeight`` (serving): activation quantization
+    stays dynamic; weight codes are read directly (uint8 — 4x less HBM than
+    the f32 master), calibration and the STE matmul are skipped.
+    """
+    if isinstance(w, QWeight):
+        return _approx_dense_frozen(x, w, cfg)
+    if cfg.mode == "float":
+        return jnp.einsum(
+            "...k,kn->...n", x, w.astype(x.dtype), preferred_element_type=jnp.float32
+        ).astype(x.dtype)
+    sg = jax.lax.stop_gradient
+    x2 = x.reshape(-1, x.shape[-1])
+    qp_x = calibrate(sg(x2), qmax=cfg.act_qmax)
+    qp_w = calibrate(sg(w), axis=(0,) if cfg.w_per_channel else None, qmax=cfg.w_qmax)
+    qx = quantize(sg(x2), qp_x)                   # (M, K) uint8
+    qw = quantize(sg(w), qp_w)                    # (K, N) uint8
+
+    # differentiable STE path (bf16 MXU matmul of fake-quantized operands)
+    x_fq = x2 + sg(dequantize(qx, qp_x).astype(x2.dtype) - x2)
+    w_fq = w + sg(dequantize(qw, qp_w).astype(w.dtype) - w)
+    y_lin = jax.lax.dot_general(
+        x_fq.astype(jnp.bfloat16),
+        w_fq.astype(jnp.bfloat16),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    # integer simulation (value path, gradient-free)
+    raw = quantized_matmul(qx, qw, cfg).astype(jnp.float32)   # sum_k mul(qx, qw)
+    K = x2.shape[-1]
+    zx = qp_x.zero_point.astype(jnp.float32)
+    zw = qp_w.zero_point.astype(jnp.float32)      # (1, N) or scalar
+    row_x = jnp.sum(qx, axis=-1, keepdims=True, dtype=jnp.float32)
+    col_w = jnp.sum(qw, axis=0, keepdims=True, dtype=jnp.float32)
+    acc = raw - zx * col_w - row_x * zw + K * zx * zw
+    y_int = acc * (qp_x.scale * qp_w.scale)
+
+    y = y_lin + sg(y_int - y_lin)
+    return y.reshape(*x.shape[:-1], w.shape[-1])
+
+
+def _approx_dense_frozen(x: jax.Array, w: QWeight, cfg: ApproxConfig) -> jax.Array:
+    """Inference dense against frozen uint8 weight codes (no calibration of
+    w, no STE dot; gradient-free — serving path)."""
+    x2 = x.reshape(-1, x.shape[-1])
+    qp_x = calibrate(x2, qmax=cfg.act_qmax)
+    qx = quantize(x2, qp_x)
+    raw = quantized_matmul(qx, w.codes, cfg).astype(jnp.float32)
+    K = x2.shape[-1]
+    zx = qp_x.zero_point.astype(jnp.float32)
+    zw = w.zero_point.astype(jnp.float32)
+    row_x = jnp.sum(qx, axis=-1, keepdims=True, dtype=jnp.float32)
+    acc = raw - zx * w.col_sum - row_x * zw + K * zx * zw
+    y = acc * (qp_x.scale * w.scale)
+    return y.reshape(*x.shape[:-1], w.codes.shape[-1]).astype(x.dtype)

@@ -1,0 +1,64 @@
+"""Gather-free bitwise evaluation of the paper's approximate multipliers.
+
+The printed Boolean expressions (4)-(9) in the paper's text do NOT reproduce
+the paper's own Table II under our best-effort transcription (the overbars
+are garbled in the source; e.g. eq. (5)'s `a1·~a0·b1` term fires on
+(a,b)=(2,2) where the exact O1 bit is 0). We therefore evaluate the
+*K-map semantics* directly: exact product minus the six-row correction —
+pure compare/mask arithmetic, no table gathers, exactly the structure the
+Pallas kernels evaluate on the VPU. Equivalence to the truth-table LUTs is
+asserted in tests/test_logic.py.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+try:  # jnp-compatible: works on numpy and jax arrays alike
+    import jax.numpy as jnp
+except Exception:  # pragma: no cover
+    jnp = np
+
+__all__ = ["approx_mul3x3", "approx_mul8x8_bitwise"]
+
+
+def approx_mul3x3(a, b, design: int = 1):
+    """Bitwise 3x3 approximate product (MUL3x3_1 or _2), gather-free.
+
+    design 1: the six rows with product > 31 are rewritten so O5 = 0
+      (Table II): (5,7)/(7,5) -> -8; (6,6),(6,7),(7,6) -> -12; (7,7) -> -20.
+    design 2: prediction unit restores O5=1/O4=0 on the a2a1b2b1 rows
+      (Table III): (5,7)/(7,5) -> -8; (6,6),(6,7),(7,6) -> +4; (7,7) -> -4.
+    """
+    exact = a * b
+    m57 = ((a == 5) & (b == 7)) | ((a == 7) & (b == 5))
+    m66 = (a == 6) & (b == 6)
+    m67 = ((a == 6) & (b == 7)) | ((a == 7) & (b == 6))
+    m77 = (a == 7) & (b == 7)
+    if design == 1:
+        return exact - 8 * m57 - 12 * m66 - 12 * m67 - 20 * m77
+    return exact - 8 * m57 + 4 * (m66 + m67) - 4 * m77
+
+
+def approx_mul8x8_bitwise(a, b, design: int = 2, removed_m2: bool = False):
+    """Elementwise aggregated 8x8 approximate product via bit logic only.
+
+    a, b: uint8-valued integer arrays. ``removed_m2``: MUL8x8_3 semantics
+    (drop M2 = A[2:0]*B[7:6] and its shifter). Bit-identical to
+    ``multipliers.mul8x8_table(...)`` (tests/test_logic.py).
+    """
+    a = a.astype(jnp.int32)
+    b = b.astype(jnp.int32)
+    alo, amid, ahi = a & 7, (a >> 3) & 7, (a >> 6) & 3
+    blo, bmid, bhi = b & 7, (b >> 3) & 7, (b >> 6) & 3
+    m = lambda x, y: approx_mul3x3(x, y, design)
+    out = (
+        m(alo, blo)
+        + (m(alo, bmid) << 3) + (m(amid, blo) << 3)
+        + (m(amid, bmid) << 6)
+        + (m(amid, bhi) << 9) + (m(ahi, bmid) << 9)
+        + ((ahi * bhi) << 12)                    # exact 2x2 (M8)
+        + (m(ahi, blo) << 6)
+    )
+    if not removed_m2:
+        out = out + (m(alo, bhi) << 6)
+    return out

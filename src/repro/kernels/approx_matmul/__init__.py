@@ -1,0 +1,4 @@
+from repro.kernels.approx_matmul.ops import approx_matmul_pallas
+from repro.kernels.approx_matmul.ref import approx_matmul_ref
+
+__all__ = ["approx_matmul_pallas", "approx_matmul_ref"]

@@ -1,0 +1,131 @@
+"""Pallas TPU kernel: fused approximate-multiplier matmul.
+
+Computes  out[m, n] = sum_k LUT[a[m, k], b[k, n]]  for an aggregated
+approximate multiplier (MUL8x8_1/2/3) WITHOUT any per-MAC gather, using the
+exact decomposition (core/lowrank.py):
+
+    out = A @ B - sum_f  v_f(A) @ u_f(B)
+
+* the exact dot rides the MXU;
+* u_f / v_f are elementwise shift/mask/compare maps computed IN-KERNEL from
+  the uint8 code tiles, so HBM traffic is identical to an exact int8 matmul
+  (the features never touch HBM);
+* per-(bk<=256) tile, every dot's magnitude stays below 2^24, so f32 MXU
+  accumulation is exact; cross-tile accumulation is int32 in VMEM scratch.
+
+Grid is (M/bm, N/bn, K/bk) with k innermost ("arbitrary"); m/n parallel.
+
+VMEM budget at the default bm=bn=128, bk=256 (uint8 codes in HBM):
+  A tile 32 KiB + B tile 32 KiB + acc 64 KiB + feature temporaries ~ 256 KiB
+  << 16 MiB v5e VMEM; the MXU sees (1 + F) fused (128,256)x(256,128) dots.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import lowrank as lr
+
+__all__ = ["approx_matmul_kernel_call", "FeatureMeta", "features_meta"]
+
+# Static per-feature metadata consumed by the kernel body:
+#   (kind, u_shift, u_bits, residue, v_terms)
+FeatureMeta = Tuple[str, int, int, int, Tuple[Tuple[int, int, Tuple[int, ...]], ...]]
+
+
+def features_meta(corr: lr.LowRankCorrection) -> Tuple[FeatureMeta, ...]:
+    return tuple(
+        (f.kind, f.u_shift, f.u_bits, f.residue, f.v_terms) for f in corr.features
+    )
+
+
+# feature maps shared with the XLA path: pure shift/mask/compare, no gathers
+_u_map = lr.u_map_jnp
+_v_map = lr.v_map_jnp
+
+
+def _kernel(a_ref, b_ref, out_ref, acc_ref, *, features: Tuple[FeatureMeta, ...], k_steps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...].astype(jnp.int32)          # (bm, bk) codes
+    b = b_ref[...].astype(jnp.int32)          # (bk, bn) codes
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    tile = jax.lax.dot_general(
+        af, bf, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    for (kind, u_shift, u_bits, residue, v_terms) in features:
+        v_a = _v_map(a, v_terms)              # (bm, bk) lhs-side table values
+        u_b = _u_map(b, kind, u_shift, u_bits, residue)  # (bk, bn) indicators
+        tile -= jax.lax.dot_general(
+            v_a, u_b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+    acc_ref[...] += tile.astype(jnp.int32)
+
+    @pl.when(k == k_steps - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("multiplier", "lhs_max", "rhs_max", "bm", "bn", "bk", "interpret"),
+)
+def approx_matmul_kernel_call(
+    a_codes: jax.Array,
+    b_codes: jax.Array,
+    *,
+    multiplier: str = "mul8x8_2",
+    lhs_max: int = 255,
+    rhs_max: int = 255,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """2-D core: a (M, K) codes, b (K, N) codes -> (M, N) int32.
+
+    Shapes must be multiples of the block sizes (ops.py pads; zero codes are
+    error-free for aggregated multipliers so padding is semantically inert).
+    """
+    M, K = a_codes.shape
+    K2, N = b_codes.shape
+    assert K == K2, (K, K2)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    assert bk <= 256, "per-tile f32 dot exactness requires bk <= 256"
+
+    corr = lr.build_correction(
+        multiplier, side="rhs", lhs_max=lhs_max, rhs_max=rhs_max
+    )
+    feats = features_meta(corr)
+    k_steps = K // bk
+
+    grid = (M // bm, N // bn, k_steps)
+    kernel = functools.partial(_kernel, features=feats, k_steps=k_steps)
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
+            pl.BlockSpec((bk, bn), lambda m, n, k: (k, n)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+        **kwargs,
+    )(a_codes, b_codes)

@@ -1,0 +1,69 @@
+"""Public jit'd wrapper around the Pallas approx-matmul kernel.
+
+Handles leading batch dimensions, pads (M, N, K) up to block multiples
+(zero codes are error-free under the aggregated multipliers, so padding is
+semantically inert), and auto-selects interpret mode off-TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.approx_matmul.kernel import approx_matmul_kernel_call
+
+__all__ = ["approx_matmul_pallas"]
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+def approx_matmul_pallas(
+    a_codes: jax.Array,
+    b_codes: jax.Array,
+    *,
+    multiplier: str = "mul8x8_2",
+    lhs_max: int = 255,
+    rhs_max: int = 255,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """a (..., M, K) codes x b (K, N) codes -> (..., M, N) int32 under the
+    named approximate multiplier (bit-exact to the LUT oracle)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    *lead, M, K = a_codes.shape
+    Kb, N = b_codes.shape
+    assert K == Kb, (K, Kb)
+    a2 = a_codes.reshape(-1, K) if lead else a_codes
+    # shrink blocks for small problems (tests), keeping TPU-friendly minima
+    bm_ = min(bm, max(8, 1 << (max(a2.shape[0], 1) - 1).bit_length()))
+    bn_ = min(bn, max(128, 1 << (max(N, 1) - 1).bit_length())) if N < bn else bn
+    bk_ = min(bk, max(128, 1 << (max(K, 1) - 1).bit_length())) if K < bk else bk
+    a2 = _pad_to(_pad_to(a2, 0, bm_), 1, bk_)
+    b2 = _pad_to(_pad_to(b_codes, 0, bk_), 1, bn_)
+    out = approx_matmul_kernel_call(
+        a2,
+        b2,
+        multiplier=multiplier,
+        lhs_max=lhs_max,
+        rhs_max=rhs_max,
+        bm=bm_,
+        bn=bn_,
+        bk=bk_,
+        interpret=interpret,
+    )
+    out = out[: (a_codes.reshape(-1, K).shape[0] if lead else M), :N]
+    if lead:
+        out = out.reshape(*lead, M, N)
+    return out

@@ -1,0 +1,57 @@
+"""Pure-jnp oracle for the approximate-multiplier matmul.
+
+This is the paper-faithful simulation: every scalar MAC goes through the
+256x256 multiplier LUT (exactly what the authors' "extended DNN platform"
+does when it swaps the exact multiplier for an approximate one).  It is the
+correctness reference for the Pallas kernel and the low-rank MXU path — and
+it is also the *performance baseline* recorded in EXPERIMENTS.md §Perf (a
+LUT gather per MAC is the mechanical port of the circuit; the low-rank path
+is the TPU-native re-expression).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["approx_matmul_ref", "approx_mul_elementwise"]
+
+
+def approx_mul_elementwise(a: jax.Array, b: jax.Array, lut: jax.Array) -> jax.Array:
+    """LUT[a, b] elementwise (broadcasting); codes int in [0, 255]."""
+    flat = lut.reshape(-1)
+    return flat[a.astype(jnp.int32) * 256 + b.astype(jnp.int32)]
+
+
+def approx_matmul_ref(
+    a_codes: jax.Array, b_codes: jax.Array, lut: jax.Array, *, block_k: int = 512
+) -> jax.Array:
+    """sum_k LUT[a[.., m, k], b[k, n]] with int32 accumulation.
+
+    a_codes: (..., M, K) ints in [0,255]; b_codes: (K, N).  Materializes
+    (..., M, block_k, N) gathers — use small shapes (tests) or accept the
+    memory cost (it IS the mechanical baseline).
+    """
+    a32 = a_codes.astype(jnp.int32)
+    b32 = b_codes.astype(jnp.int32)
+    flat = lut.reshape(-1).astype(jnp.int32)
+    K = a32.shape[-1]
+
+    def chunk(acc_and_k, _):
+        acc, k0 = acc_and_k
+        ak = jax.lax.dynamic_slice_in_dim(a32, k0, block_k, axis=a32.ndim - 1)
+        bk = jax.lax.dynamic_slice_in_dim(b32, k0, block_k, axis=0)
+        prod = flat[ak[..., :, :, None] * 256 + bk[None, :, :]]
+        return (acc + jnp.sum(prod, axis=-2), k0 + block_k), None
+
+    if K % block_k != 0:
+        # un-scanned fallback for ragged K (small test shapes)
+        prod = flat[a32[..., :, :, None] * 256 + b32[None, :, :]]
+        return jnp.sum(prod, axis=-2, dtype=jnp.int32)
+
+    *lead, M, _ = a32.shape
+    N = b32.shape[1]
+    acc0 = jnp.zeros((*lead, M, N), jnp.int32)
+    (acc, _), _ = jax.lax.scan(
+        chunk, (acc0, jnp.int32(0)), None, length=K // block_k
+    )
+    return acc

@@ -1,0 +1,4 @@
+from repro.kernels.approx_mul_eltwise.ops import approx_mul_eltwise_pallas
+from repro.kernels.approx_mul_eltwise.ref import approx_mul_eltwise_ref
+
+__all__ = ["approx_mul_eltwise_pallas", "approx_mul_eltwise_ref"]

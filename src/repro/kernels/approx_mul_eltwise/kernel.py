@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: elementwise approximate multiply, gather-free.
+
+Evaluates the aggregated 8x8 approximate product with pure VPU bit logic
+(core/logic.py): shifts/masks/compares — no 64 KiB LUT in VMEM and no
+per-element gather. Used by the CNN platform when simulating the multiplier
+on arbitrary elementwise products (e.g. quantized depthwise ops) and as an
+independent cross-check of the matmul kernel's semantics.
+
+Tiles: (bm, bn) VMEM blocks of the flattened operands; purely elementwise,
+so the grid is embarrassingly parallel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.logic import approx_mul8x8_bitwise
+
+__all__ = ["approx_mul_eltwise_call"]
+
+_DESIGN = {"mul8x8_1": (1, False), "mul8x8_2": (2, False), "mul8x8_3": (2, True)}
+
+
+def _kernel(a_ref, b_ref, o_ref, *, design: int, removed_m2: bool):
+    a = a_ref[...].astype(jnp.int32)
+    b = b_ref[...].astype(jnp.int32)
+    o_ref[...] = approx_mul8x8_bitwise(a, b, design, removed_m2).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("multiplier", "block", "interpret"))
+def approx_mul_eltwise_call(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    multiplier: str = "mul8x8_2",
+    block: int = 1024,
+    interpret: bool = False,
+) -> jax.Array:
+    """a, b: equal-shape uint8-valued arrays -> int32 approximate products."""
+    design, removed = _DESIGN[multiplier]
+    flat_a = a.reshape(-1)
+    flat_b = b.reshape(-1)
+    n = flat_a.shape[0]
+    pad = (-n) % block
+    if pad:
+        flat_a = jnp.pad(flat_a, (0, pad))
+        flat_b = jnp.pad(flat_b, (0, pad))
+    grid = (flat_a.shape[0] // block,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, design=design, removed_m2=removed),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(flat_a.shape, jnp.int32),
+        interpret=interpret,
+    )(flat_a, flat_b)
+    return out[:n].reshape(a.shape)

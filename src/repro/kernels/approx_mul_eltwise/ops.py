@@ -1,0 +1,23 @@
+"""jit'd wrapper for the elementwise approximate-multiply kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.approx_mul_eltwise.kernel import approx_mul_eltwise_call
+
+__all__ = ["approx_mul_eltwise_pallas"]
+
+
+def approx_mul_eltwise_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    multiplier: str = "mul8x8_2",
+    block: int = 1024,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return approx_mul_eltwise_call(
+        a, b, multiplier=multiplier, block=block, interpret=interpret
+    )

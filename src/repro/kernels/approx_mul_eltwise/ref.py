@@ -1,0 +1,15 @@
+"""Oracle for the elementwise approximate multiplier: the 256x256 LUT."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import multipliers as M
+
+__all__ = ["approx_mul_eltwise_ref"]
+
+
+def approx_mul_eltwise_ref(a: jax.Array, b: jax.Array, multiplier: str = "mul8x8_2") -> jax.Array:
+    """LUT[a, b] elementwise (uint8-valued ints in, int32 out)."""
+    lut = jnp.asarray(M.mul8x8_table(multiplier)).reshape(-1)
+    return lut[a.astype(jnp.int32) * 256 + b.astype(jnp.int32)]

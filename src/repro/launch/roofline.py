@@ -1,0 +1,214 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware needed).
+
+Three terms per (arch x shape x mesh), all in seconds:
+
+    compute    = HLO_FLOPs      / (chips * PEAK_FLOPS)
+    memory     = HLO_bytes      / (chips * HBM_BW)
+    collective = wire_bytes     / (chips * LINK_BW)
+
+``compiled.cost_analysis()`` reports per-device flops/bytes for the SPMD
+module, so per-device values divided by per-chip peaks ARE the global terms.
+Collective bytes are parsed from the optimized HLO: every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute result shape,
+weighted by the standard ring factors using the op's replica-group size.
+
+Hardware model (TPU v5e, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (assignment-provided constants).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = [
+    "PEAK_FLOPS",
+    "HBM_BW",
+    "LINK_BW",
+    "CollectiveStats",
+    "parse_collectives",
+    "roofline_terms",
+]
+
+PEAK_FLOPS = 197e12     # bf16 FLOP/s per chip
+HBM_BW = 819e9          # bytes/s per chip
+LINK_BW = 50e9          # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(segment):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))          # [n_groups, group_size]
+    return 1
+
+
+# Ops that necessarily touch HBM on a well-fused TPU pipeline. Pure
+# elementwise arithmetic is EXCLUDED (assumed fused into producers/consumers
+# — XLA:TPU does this; XLA:CPU barely fuses, so its raw `bytes accessed`
+# overcounts HBM traffic by ~5-10x and is kept only as `bytes_raw`).
+_MEM_OPS = (
+    "dot", "convolution", "fusion", "reduce", "reduce-window", "scatter",
+    "gather", "sort", "dynamic-slice", "dynamic-update-slice", "copy",
+    "transpose", "concatenate", "pad", "select-and-scatter", "custom-call",
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "rng", "rng-bit-generator", "cholesky",
+    "triangular-solve",
+)
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?[^=]*?)\s+([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def estimate_hbm_bytes(hlo_text: str) -> float:
+    """Fusion-aware HBM traffic model: sum operand+result bytes over ops
+    that roundtrip HBM on TPU (dots, reduces, data movement, collectives,
+    fusions), resolving operand shapes through a name->bytes symbol table.
+    While-loop bodies appear once (handled by the caller's two-point
+    depth extrapolation)."""
+    sizes: Dict[str, int] = {}
+    total = 0.0
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, result_seg, op = m.group(1), m.group(2), m.group(3)
+        b = _shape_bytes(result_seg)
+        sizes[name] = b
+        base = op[:-6] if op.endswith("-start") else op
+        if base not in _MEM_OPS:
+            continue
+        # operand bytes: resolve %refs inside the call parens
+        call = line.split(f"{op}(", 1)[1] if f"{op}(" in line else ""
+        call = call.split(")", 1)[0]
+        refs = _OPERAND_RE.findall(call)
+        if base == "dynamic-update-slice":
+            # in-place aliased update: traffic = read+write of the UPDATE
+            # slice (operand 1), not the whole buffer
+            upd = sizes.get(refs[1], 0) if len(refs) > 1 else 0
+            total += 2 * upd
+            continue
+        if base == "dynamic-slice":
+            # reads only the slice, not the sliced-from buffer
+            total += 2 * b
+            continue
+        if base == "scatter":
+            # traffic ~ indices + 2x updates (gather-modify-write of slices)
+            upd = sum(sizes.get(r, 0) for r in refs[1:])
+            total += 2 * upd
+            continue
+        opb = sum(sizes.get(r, 0) for r in refs)
+        total += b + opb
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    per_op: Dict[str, float]            # wire bytes per device, by op kind
+    counts: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.per_op.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Per-device wire bytes from an SPMD-partitioned optimized HLO module."""
+    per_op: Dict[str, float] = {k: 0.0 for k in _COLL_OPS}
+    counts: Dict[str, int] = {k: 0 for k in _COLL_OPS}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "=" not in ls:
+            continue
+        hit = None
+        for op in _COLL_OPS:
+            # match ` op(`, ` op-start(` but not `-done(`
+            if f" {op}(" in ls or f" {op}-start(" in ls:
+                hit = op
+                break
+        if hit is None:
+            continue
+        _, rhs = ls.split("=", 1)
+        n = _group_size(ls)
+        if n <= 1:
+            continue
+        # result type sits between '=' and the op name: `%x = f32[..] op(..)`
+        seg = rhs.split(f" {hit}", 1)[0]
+        b = _shape_bytes(seg)
+        if f"{hit}-start(" in ls:
+            # async start results are (operand_buf, result_buf[, ...]) tuples
+            b = b / 2
+        if hit == "all-reduce":
+            wire = 2.0 * (n - 1) / n * b
+        elif hit == "collective-permute":
+            wire = float(b)
+        else:  # all-gather result / reduce-scatter input / all-to-all
+            wire = (n - 1) / n * b
+        per_op[hit] += wire
+        counts[hit] += 1
+    return CollectiveStats(per_op=per_op, counts=counts)
+
+
+def roofline_terms(
+    *,
+    flops_per_device: float,
+    bytes_per_device: float,
+    wire_bytes_per_device: float,
+    n_devices: int,
+    model_flops_global: Optional[float] = None,
+) -> Dict[str, float]:
+    t_c = flops_per_device / PEAK_FLOPS
+    t_m = bytes_per_device / HBM_BW
+    t_x = wire_bytes_per_device / LINK_BW
+    dominant = max(("compute", t_c), ("memory", t_m), ("collective", t_x), key=lambda kv: kv[1])
+    out = {
+        "t_compute_s": t_c,
+        "t_memory_s": t_m,
+        "t_collective_s": t_x,
+        "bound": dominant[0],
+        "t_bound_s": dominant[1],
+        "hlo_flops_global": flops_per_device * n_devices,
+        "hlo_bytes_global": bytes_per_device * n_devices,
+        "wire_bytes_global": wire_bytes_per_device * n_devices,
+    }
+    if model_flops_global:
+        out["model_flops_global"] = model_flops_global
+        out["useful_flop_fraction"] = model_flops_global / max(out["hlo_flops_global"], 1.0)
+        # roofline fraction: useful model flops per second at the bound vs peak
+        t = max(dominant[1], 1e-30)
+        out["model_flops_per_s"] = model_flops_global / t / n_devices
+        out["roofline_fraction"] = out["model_flops_per_s"] / PEAK_FLOPS
+    return out
+
+
+def suggest(bound: str) -> str:
+    return {
+        "compute": "reduce arithmetic: fewer correction features (range pruning), bf16 exact path, larger fused tiles",
+        "memory": "cut HBM traffic: fuse feature maps into the matmul kernel, int8/uint8 storage, remat policy tuning",
+        "collective": "re-shard to shrink all-gathers: FSDP prefetch overlap, 2D sharding of big projections, gradient compression",
+    }[bound]

@@ -1,0 +1,68 @@
+"""ShapeDtypeStruct stand-ins for every model input: the dry-run lowers
+against these (weak-type-correct, shardable, zero allocation).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.transformer import init_cache, init_params
+from repro.train import optim as O
+
+__all__ = ["input_specs", "params_specs", "cache_specs", "state_specs"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Batch inputs for the given shape kind.
+
+    train/prefill: full (B, S); decode: (B, 1) new token with (B,) lengths.
+    Stub-frontend archs (vlm/audio) get precomputed embeddings (B, S, d).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    s_in = 1 if shape.kind == "decode" else S
+    specs: Dict[str, Any] = {}
+    if cfg.embed_input:
+        specs["tokens"] = _sds((B, s_in), jnp.int32)
+    else:
+        specs["embeddings"] = _sds((B, s_in, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.pos_embedding == "m_rope" and shape.kind != "decode":
+        specs["positions_thw"] = _sds((B, 3, s_in), jnp.int32)
+    if shape.kind == "train":
+        specs["labels"] = _sds((B, S), jnp.int32)
+    return specs
+
+
+def params_specs(cfg: ModelConfig, *, frozen: bool = False) -> Any:
+    """Parameter ShapeDtypeStructs via eval_shape (no allocation).
+    ``frozen``: serving layout — matmul weights pre-quantized to QWeight."""
+    def build():
+        p = init_params(cfg, jax.random.PRNGKey(0))
+        if frozen:
+            from repro.core.approx import prequantize_tree
+
+            p = prequantize_tree(p, cfg.approx)
+        return p
+
+    return jax.eval_shape(build)
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig) -> Any:
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len, jnp.dtype(cfg.dtype))
+    )
+
+
+def state_specs(cfg: ModelConfig, opt_cfg: O.OptConfig) -> Any:
+    p = params_specs(cfg)
+    return {
+        "params": p,
+        "opt": jax.eval_shape(functools.partial(O.init_opt_state, opt_cfg), p),
+    }

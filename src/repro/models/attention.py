@@ -1,0 +1,233 @@
+"""Grouped-query attention: chunked-causal for train/prefill (memory-bounded,
+exact softmax), plus single-token decode against a static KV cache.
+
+K/V are never head-repeated: scores are computed with grouped einsums
+(q reshaped to (B, S, Hkv, group, hd)), so KV-cache HBM footprint stays at
+``n_kv`` heads — this is what makes decode_32k x batch 128 fit.
+
+All projections route through ``layers.dense`` (approximate-multiplier aware).
+The score/AV einsums stay exact float — the paper approximates the MAC arrays
+of conv/fc layers, and projection matmuls are the analogous LM hot spots;
+see DESIGN.md §5.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.approx import ApproxConfig, concat_weights, w_dim
+from repro.models import layers as L
+
+__all__ = ["AttnParams", "init_attn", "attention_core", "self_attention", "decode_attention"]
+
+_NEG = -1e30
+
+
+class AttnParams(NamedTuple):
+    wq: jax.Array   # (d, Hq*hd)
+    wk: jax.Array   # (d, Hkv*hd)
+    wv: jax.Array   # (d, Hkv*hd)
+    wo: jax.Array   # (Hq*hd, d)
+
+
+def init_attn(key, d_model: int, n_heads: int, n_kv: int, head_dim: int) -> AttnParams:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return AttnParams(
+        wq=L.init_dense(k1, d_model, n_heads * head_dim),
+        wk=L.init_dense(k2, d_model, n_kv * head_dim),
+        wv=L.init_dense(k3, d_model, n_kv * head_dim),
+        wo=L.init_dense(k4, n_heads * head_dim, d_model),
+    )
+
+
+def attention_core(
+    q: jax.Array,            # (B, Sq, H, hd)
+    k: jax.Array,            # (B, Sk, Hkv, hd)
+    v: jax.Array,            # (B, Sk, Hkv, hd)
+    *,
+    causal: bool,
+    q_offset: int | jax.Array = 0,
+    kv_len: Optional[jax.Array] = None,   # (B,) valid cache lengths for decode
+    q_chunk: int = 512,
+) -> jax.Array:
+    """Exact softmax GQA, scanned over query chunks (O(Sq*chunk*Sk) transient).
+
+    Sharding strategy (TP): when the flat head count divides the "model"
+    axis, heads are repeated and head-sharded (scores (B,H,c,Sk)/tp per
+    device); otherwise K/V are sequence-sharded over "model" (SP) and GSPMD
+    inserts the softmax all-reduce.
+    """
+    from repro.parallel.sharding import constrain, mesh_axis_size
+
+    B, Sq, H, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    tp = mesh_axis_size("model")
+    head_sharded = H % tp == 0
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+
+    H_orig = H
+    if Sq > 1 and g > 1:
+        # train/prefill: repeat KV to full heads (cheap vs activations) so one
+        # einsum over the flat, shardable head axis does the work
+        b_, s_, h_, d_ = k.shape
+        k = jnp.broadcast_to(k[:, :, :, None, :], (b_, s_, h_, g, d_)).reshape(b_, s_, H, d_)
+        v = jnp.broadcast_to(v[:, :, :, None, :], (b_, s_, h_, g, d_)).reshape(b_, s_, H, d_)
+        Hkv_eff = H
+    else:
+        Hkv_eff = Hkv
+
+    if Sq > 1 and not head_sharded and tp > 1 and Hkv_eff == H:
+        # Indivisible head counts (e.g. 56 heads on a 16-way model axis) make
+        # GSPMD flip between partial-head and sequence shardings with
+        # "involuntary full rematerialization" copies. Pad the head axis to
+        # the next multiple of tp (zero heads are pure overhead of H_pad/H-1,
+        # far cheaper than replicated score tensors) and slice afterwards.
+        H = -(-H // tp) * tp
+        pad = [(0, 0), (0, 0), (0, H - H_orig), (0, 0)]
+        q = jnp.pad(q, pad)
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+        Hkv_eff = H
+        head_sharded = True
+
+    if Sq == 1 and Hkv_eff % tp != 0:
+        # decode against a grouped cache whose KV heads don't divide the TP
+        # axis: head-sharding q would make GSPMD all-gather the whole KV
+        # cache per layer (~1 GB/layer at 32k ctx). Keep the cache
+        # sequence-sharded and let the scores/AV contraction stay on S with
+        # a tiny (B,H,1) softmax all-reduce instead.  [§Perf C4]
+        head_sharded = False
+        q = constrain(q, ("batch", None, None, None))
+        k = constrain(k, ("batch", "model", None, None))
+        v = constrain(v, ("batch", "model", None, None))
+    elif head_sharded:
+        q = constrain(q, ("batch", None, "model", None))
+        if Hkv_eff % tp == 0:
+            k = constrain(k, ("batch", None, "model", None))
+            v = constrain(v, ("batch", None, "model", None))
+    else:
+        # SP fallback: shard the KV sequence axis
+        k = constrain(k, ("batch", "model", None, None))
+        v = constrain(v, ("batch", "model", None, None))
+
+    ge = H // Hkv_eff
+    kt = k.swapaxes(1, 2)                        # (B, Hkv_eff, Sk, hd) bf16
+    vt = v.swapaxes(1, 2)
+    kv_pos = jnp.arange(Sk)
+
+    def one_chunk(q_blk: jax.Array, blk_start) -> jax.Array:
+        c = q_blk.shape[1]
+        qt = (q_blk * scale.astype(q.dtype)).reshape(B, c, Hkv_eff, ge, hd)
+        # (B, Hkv_eff, g, c, Sk): bf16 operands, f32 accumulation
+        scores = jnp.einsum(
+            "bchgd,bhkd->bhgck", qt, kt, preferred_element_type=jnp.float32
+        )
+        # masks are ADDITIVE on small pre-broadcast shapes: jnp.where on the
+        # full score tensor would pin a full-size pred residual for backward
+        if causal:
+            q_pos = blk_start + q_offset + jnp.arange(c)
+            neg = jnp.where(q_pos[:, None] >= kv_pos, 0.0, _NEG)     # (c, Sk)
+            scores = scores + neg[None, None, None, :, :]
+        if kv_len is not None:
+            neg = jnp.where(kv_pos[None, :] < kv_len[:, None], 0.0, _NEG)  # (B, Sk)
+            scores = scores + neg[:, None, None, None, :]
+        probs = jax.nn.softmax(scores, axis=-1).astype(vt.dtype)
+        out = jnp.einsum(
+            "bhgck,bhkd->bchgd", probs, vt, preferred_element_type=jnp.float32
+        )
+        return out.reshape(B, c, H, hd).astype(q.dtype)
+
+    def unpad(o):
+        return o[:, :, :H_orig] if H != H_orig else o
+
+    if Sq <= q_chunk or Sq % q_chunk != 0:
+        return unpad(one_chunk(q, 0))
+
+    n_blk = Sq // q_chunk
+    qb = q.reshape(B, n_blk, q_chunk, H, hd).swapaxes(0, 1)  # (n, B, c, H, hd)
+
+    def body(start, q_blk):
+        return start + q_chunk, one_chunk(q_blk, start)
+
+    _, ob = jax.lax.scan(body, 0, qb)
+    return unpad(ob.swapaxes(0, 1).reshape(B, Sq, H, hd))
+
+
+def self_attention(
+    x: jax.Array,                 # (B, S, d)
+    p: AttnParams,
+    *,
+    n_heads: int,
+    n_kv: int,
+    cfg: ApproxConfig,
+    positions: Optional[jax.Array] = None,        # (B, S) rope positions
+    m_rope: Optional[Tuple[jax.Array, Tuple[int, ...]]] = None,
+    rope_theta: float = 10000.0,
+    use_rope: bool = True,
+    q_chunk: int = 512,
+    fuse_qkv: bool = False,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Training/prefill self-attention. Returns (out, (k, v)) so callers can
+    seed a decode cache from prefill."""
+    B, S, d = x.shape
+    hd = w_dim(p.wq, 1) // n_heads
+    if fuse_qkv:
+        # §Perf lever: one activation-quantization + one feature-map pass
+        # feeding a single wide dot (per-output-channel weight scales make
+        # the fused quantization bit-identical to the separate one)
+        wqkv = concat_weights([p.wq, p.wk, p.wv], axis=1)
+        qkv = L.dense(x, wqkv, cfg)
+        nq = n_heads * hd
+        nk = n_kv * hd
+        q, k, v = qkv[..., :nq], qkv[..., nq : nq + nk], qkv[..., nq + nk :]
+        q = q.reshape(B, S, n_heads, hd)
+        k = k.reshape(B, S, n_kv, hd)
+        v = v.reshape(B, S, n_kv, hd)
+    else:
+        q = L.dense(x, p.wq, cfg).reshape(B, S, n_heads, hd)
+        k = L.dense(x, p.wk, cfg).reshape(B, S, n_kv, hd)
+        v = L.dense(x, p.wv, cfg).reshape(B, S, n_kv, hd)
+    if use_rope:
+        if m_rope is not None:
+            pos_thw, sections = m_rope
+            q, k = L.apply_m_rope(q, k, pos_thw, sections, theta=rope_theta)
+        else:
+            if positions is None:
+                positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+            q, k = L.apply_rope(q, k, positions, theta=rope_theta)
+    out = attention_core(q, k, v, causal=True, q_chunk=q_chunk)
+    out = L.dense(out.reshape(B, S, n_heads * hd), p.wo, cfg)
+    return out, (k, v)
+
+
+def decode_attention(
+    x: jax.Array,                 # (B, 1, d)
+    p: AttnParams,
+    k_cache: jax.Array,           # (B, Smax, Hkv, hd)
+    v_cache: jax.Array,
+    cur_len: jax.Array,           # (B,) current lengths (new token index)
+    *,
+    n_heads: int,
+    n_kv: int,
+    cfg: ApproxConfig,
+    rope_theta: float = 10000.0,
+    use_rope: bool = True,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """One decode step: append K/V at ``cur_len``, attend over the cache."""
+    B, _, d = x.shape
+    hd = w_dim(p.wq, 1) // n_heads
+    q = L.dense(x, p.wq, cfg).reshape(B, 1, n_heads, hd)
+    k = L.dense(x, p.wk, cfg).reshape(B, 1, n_kv, hd)
+    v = L.dense(x, p.wv, cfg).reshape(B, 1, n_kv, hd)
+    if use_rope:
+        q, k = L.apply_rope(q, k, cur_len[:, None], theta=rope_theta)
+    # scatter new kv at cur_len (per-batch dynamic index)
+    b_idx = jnp.arange(B)
+    k_cache = k_cache.at[b_idx, cur_len].set(k[:, 0].astype(k_cache.dtype))
+    v_cache = v_cache.at[b_idx, cur_len].set(v[:, 0].astype(v_cache.dtype))
+    out = attention_core(q, k_cache, v_cache, causal=False, kv_len=cur_len + 1, q_chunk=1)
+    out = L.dense(out.reshape(B, 1, n_heads * hd), p.wo, cfg)
+    return out, (k_cache, v_cache)

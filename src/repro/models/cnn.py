@@ -1,0 +1,198 @@
+"""The paper's evaluation DNNs: LeNet, LeNet+, AlexNet, VGG16, ResNet-19.
+
+Convolutions are lowered to im2col patches + ``dense`` so that *every MAC*
+goes through the configured approximate multiplier — exactly the paper's
+platform semantics (approximate multipliers inside conv/FC arrays).
+
+ResNet-19 follows the CIFAR variant common in the literature the paper draws
+from: stem conv + 3 stages of basic blocks ({3,3,2} blocks, channels
+128/256/512) + 2 FC layers = 19 weight layers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.approx import ApproxConfig
+from repro.models import layers as L
+
+__all__ = ["CNN_NAMES", "init_cnn", "cnn_forward"]
+
+CNN_NAMES = ("lenet", "lenet_plus", "alexnet", "vgg16", "resnet19")
+
+
+def conv2d(x: jax.Array, w: jax.Array, b, *, stride=1, padding="SAME", cfg: ApproxConfig):
+    """x (B,H,W,C) * w (kh,kw,C,O) via im2col + approximate dense."""
+    kh, kw, C, O = w.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # (B, H', W', C*kh*kw) with channel-slowest flattening
+    wmat = jnp.transpose(w, (2, 0, 1, 3)).reshape(C * kh * kw, O)
+    y = L.dense(patches, wmat, cfg)
+    return y + b
+
+
+def max_pool(x, window=2, stride=2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, window, window, 1), (1, stride, stride, 1), "VALID"
+    )
+
+
+def avg_pool(x, window=2, stride=2):
+    s = jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, window, window, 1), (1, stride, stride, 1), "VALID"
+    )
+    return s / float(window * window)
+
+
+def batch_norm(x, gamma, beta, eps=1e-5):
+    mu = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    return gamma * (x - mu) * jax.lax.rsqrt(var + eps) + beta
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def _conv_init(key, kh, kw, c, o):
+    fan_in = kh * kw * c
+    return jax.random.truncated_normal(key, -2, 2, (kh, kw, c, o)) * (2.0 / fan_in) ** 0.5
+
+
+def _layer_defs(name: str, in_ch: int, num_classes: int):
+    """Declarative layer list: (kind, args...)."""
+    if name == "lenet":
+        return [
+            ("conv", 5, 6, 1, "SAME"), ("relu",), ("avgpool",),
+            ("conv", 5, 16, 1, "VALID"), ("relu",), ("avgpool",),
+            ("flatten",), ("fc", 120), ("relu",), ("fc", 84), ("relu",), ("fc", num_classes),
+        ]
+    if name == "lenet_plus":   # paper's LeNet+ (extra conv layer)
+        return [
+            ("conv", 5, 6, 1, "SAME"), ("relu",), ("avgpool",),
+            ("conv", 5, 16, 1, "VALID"), ("relu",),
+            ("conv", 3, 32, 1, "SAME"), ("relu",), ("avgpool",),
+            ("flatten",), ("fc", 120), ("relu",), ("fc", 84), ("relu",), ("fc", num_classes),
+        ]
+    if name == "alexnet":      # CIFAR-adapted AlexNet
+        return [
+            ("conv", 3, 64, 1, "SAME"), ("relu",), ("maxpool",),
+            ("conv", 3, 192, 1, "SAME"), ("relu",), ("maxpool",),
+            ("conv", 3, 384, 1, "SAME"), ("relu",),
+            ("conv", 3, 256, 1, "SAME"), ("relu",),
+            ("conv", 3, 256, 1, "SAME"), ("relu",), ("maxpool",),
+            ("flatten",), ("fc", 1024), ("relu",), ("fc", 512), ("relu",), ("fc", num_classes),
+        ]
+    if name == "vgg16":
+        cfgs = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M", 512, 512, 512, "M", 512, 512, 512, "M"]
+        out: List[tuple] = []
+        for c in cfgs:
+            if c == "M":
+                out.append(("maxpool",))
+            else:
+                out += [("conv", 3, c, 1, "SAME"), ("bn",), ("relu",)]
+        out += [("flatten",), ("fc", 512), ("relu",), ("fc", 512), ("relu",), ("fc", num_classes)]
+        return out
+    if name == "resnet19":
+        out = [("conv", 3, 128, 1, "SAME"), ("bn",), ("relu",)]
+        for (blocks, ch, stride) in [(3, 128, 1), (3, 256, 2), (2, 512, 2)]:
+            for b in range(blocks):
+                out.append(("resblock", ch, stride if b == 0 else 1))
+        out += [("gap",), ("fc", 256), ("relu",), ("fc", num_classes)]
+        return out
+    raise KeyError(name)
+
+
+def init_cnn(name: str, key, *, in_shape=(32, 32, 3), num_classes: int = 10) -> Dict[str, Any]:
+    """Shape-inferring init. Returns {"layers": [per-layer param dicts]}."""
+    defs = _layer_defs(name, in_shape[-1], num_classes)
+    params: List[Dict[str, Any]] = []
+    h, w, c = in_shape
+    for d in defs:
+        key, sub = jax.random.split(key)
+        kind = d[0]
+        if kind == "conv":
+            ksz, o, stride, pad = d[1], d[2], d[3], d[4]
+            params.append({"w": _conv_init(sub, ksz, ksz, c, o), "b": jnp.zeros((o,))})
+            h = h // stride if pad == "SAME" else (h - ksz) // stride + 1
+            w = w // stride if pad == "SAME" else (w - ksz) // stride + 1
+            c = o
+        elif kind == "bn":
+            params.append({"gamma": jnp.ones((c,)), "beta": jnp.zeros((c,))})
+        elif kind == "resblock":
+            ch, stride = d[1], d[2]
+            k1, k2, k3 = jax.random.split(sub, 3)
+            blk = {
+                "w1": _conv_init(k1, 3, 3, c, ch), "b1": jnp.zeros((ch,)),
+                "g1": jnp.ones((ch,)), "be1": jnp.zeros((ch,)),
+                "w2": _conv_init(k2, 3, 3, ch, ch), "b2": jnp.zeros((ch,)),
+                "g2": jnp.ones((ch,)), "be2": jnp.zeros((ch,)),
+            }
+            if stride != 1 or c != ch:
+                blk["wp"] = _conv_init(k3, 1, 1, c, ch)
+                blk["bp"] = jnp.zeros((ch,))
+            params.append(blk)
+            h, w, c = h // stride, w // stride, ch
+        elif kind in ("maxpool", "avgpool"):
+            params.append({})
+            h, w = h // 2, w // 2
+        elif kind == "gap":
+            params.append({})
+            h = w = 1
+        elif kind == "flatten":
+            params.append({})
+            c = h * w * c
+            h = w = 1
+        elif kind == "fc":
+            o = d[1]
+            params.append({"w": L.init_dense(sub, c, o), "b": jnp.zeros((o,))})
+            c = o
+        elif kind == "relu":
+            params.append({})
+        else:
+            raise KeyError(kind)
+    return {"name": name, "layers": params, "defs": defs}
+
+
+def cnn_forward(model: Dict[str, Any], x: jax.Array, cfg: ApproxConfig) -> jax.Array:
+    """x (B,H,W,C) float -> logits (B, classes)."""
+    for d, p in zip(model["defs"], model["layers"]):
+        kind = d[0]
+        if kind == "conv":
+            x = conv2d(x, p["w"], p["b"], stride=d[3], padding=d[4], cfg=cfg)
+        elif kind == "bn":
+            x = batch_norm(x, p["gamma"], p["beta"])
+        elif kind == "relu":
+            x = jax.nn.relu(x)
+        elif kind == "maxpool":
+            x = max_pool(x)
+        elif kind == "avgpool":
+            x = avg_pool(x)
+        elif kind == "gap":
+            x = jnp.mean(x, axis=(1, 2), keepdims=False)
+        elif kind == "flatten":
+            x = x.reshape(x.shape[0], -1)
+        elif kind == "fc":
+            x = L.dense(x, p["w"], cfg) + p["b"]
+        elif kind == "resblock":
+            stride = d[2]
+            h = conv2d(x, p["w1"], p["b1"], stride=stride, padding="SAME", cfg=cfg)
+            h = jax.nn.relu(batch_norm(h, p["g1"], p["be1"]))
+            h = conv2d(h, p["w2"], p["b2"], stride=1, padding="SAME", cfg=cfg)
+            h = batch_norm(h, p["g2"], p["be2"])
+            sc = x
+            if "wp" in p:
+                sc = conv2d(x, p["wp"], p["bp"], stride=stride, padding="SAME", cfg=cfg)
+            x = jax.nn.relu(h + sc)
+        else:
+            raise KeyError(kind)
+    return x

@@ -1,0 +1,140 @@
+"""Mixture-of-Experts FFN: shared experts + routed top-k with capacity.
+
+Dispatch is sort-based with static shapes (dry-run friendly): token->expert
+assignments are sorted, each token takes a rank-within-expert slot, tokens
+past the expert capacity are dropped (GShard semantics). Expert weights are
+stacked (E, ...) so the experts axis shards over the "model" mesh axis (EP);
+GSPMD turns the gather/scatter into all-to-alls.
+
+Expert matmuls run through the approximate-multiplier pipeline via a
+lax.scan over experts (each step is a plain ``dense``). The router stays in
+float — it is a control path, quantizing it is not part of the paper.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.approx import ApproxConfig, w_dim
+from repro.models import layers as L
+
+__all__ = ["MoEParams", "init_moe", "moe_ffn", "load_balance_loss"]
+
+
+class MoEParams(NamedTuple):
+    router: jax.Array            # (d, E)
+    w_gate: jax.Array            # (E, d, ff)
+    w_up: jax.Array              # (E, d, ff)
+    w_down: jax.Array            # (E, ff, d)
+    shared_gate: Optional[jax.Array]   # (d, sff) or None
+    shared_up: Optional[jax.Array]
+    shared_down: Optional[jax.Array]   # (sff, d)
+    shared_router: Optional[jax.Array] # (d, 1) sigmoid gate (qwen2-moe style)
+
+
+def init_moe(
+    key,
+    d_model: int,
+    d_ff: int,
+    n_experts: int,
+    *,
+    shared_d_ff: int = 0,
+) -> MoEParams:
+    ks = jax.random.split(key, 8)
+    def ed(k, i, o):
+        return L.truncated_normal_init(k, (n_experts, i, o))
+    return MoEParams(
+        router=L.init_dense(ks[0], d_model, n_experts),
+        w_gate=ed(ks[1], d_model, d_ff),
+        w_up=ed(ks[2], d_model, d_ff),
+        w_down=ed(ks[3], d_ff, d_model),
+        shared_gate=L.init_dense(ks[4], d_model, shared_d_ff) if shared_d_ff else None,
+        shared_up=L.init_dense(ks[5], d_model, shared_d_ff) if shared_d_ff else None,
+        shared_down=L.init_dense(ks[6], shared_d_ff, d_model) if shared_d_ff else None,
+        shared_router=L.init_dense(ks[7], d_model, 1) if shared_d_ff else None,
+    )
+
+
+def load_balance_loss(router_probs: jax.Array, expert_mask: jax.Array) -> jax.Array:
+    """Switch-style aux loss: E * sum_e f_e * P_e."""
+    E = router_probs.shape[-1]
+    f = jnp.mean(expert_mask, axis=0)           # fraction routed per expert
+    p = jnp.mean(router_probs, axis=0)          # mean router prob per expert
+    return jnp.float32(E) * jnp.sum(f * p)
+
+
+def moe_ffn(
+    x: jax.Array,                # (T, d) tokens
+    p: MoEParams,
+    *,
+    top_k: int,
+    cfg: ApproxConfig,
+    capacity_factor: float = 1.25,
+    unroll_experts: bool = False,   # cost-extraction lowering (dryrun)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (out (T, d), aux_loss)."""
+    T, d = x.shape
+    E = p.router.shape[-1]
+    ff = w_dim(p.w_gate, -1)
+    capacity = int(max(top_k * T * capacity_factor / E, 1))
+    capacity = min(capacity, T)
+    # round capacity to a multiple of 8 for tiling friendliness
+    capacity = max(8, (capacity // 8) * 8)
+
+    logits = (x.astype(jnp.float32)) @ p.router.astype(jnp.float32)   # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, top_k)                        # (T, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)            # renorm
+
+    # ---- sort-based dispatch with capacity ---------------------------------
+    flat_e = top_e.reshape(-1)                                        # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T), top_k)
+    flat_w = top_p.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    # rank within expert: position - index of first occurrence of that expert
+    counts = jnp.bincount(flat_e, length=E)
+    starts = jnp.concatenate([jnp.zeros(1, counts.dtype), jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(T * top_k) - starts[se]
+    keep = rank < capacity
+    slot = se * capacity + jnp.where(keep, rank, 0)                   # (T*k,)
+
+    buf = jnp.zeros((E * capacity, d), x.dtype)
+    buf = buf.at[slot].add(jnp.where(keep[:, None], x[st], 0))
+    buf = buf.reshape(E, capacity, d)
+
+    # ---- expert FFN (scan over experts; approx-multiplier matmuls) ---------
+    def one_expert(_, ws):
+        wg, wu, wd, xb = ws
+        h = jax.nn.silu(L.dense(xb, wg, cfg)) * L.dense(xb, wu, cfg)
+        return None, L.dense(h, wd, cfg)
+
+    if unroll_experts:
+        sl = lambda w, e: jax.tree.map(lambda a: a[e], w)   # QWeight-safe slice
+        outs = [
+            one_expert(None, (sl(p.w_gate, e), sl(p.w_up, e), sl(p.w_down, e), buf[e]))[1]
+            for e in range(E)
+        ]
+        out_buf = jnp.stack(outs)
+    else:
+        _, out_buf = jax.lax.scan(one_expert, None, (p.w_gate, p.w_up, p.w_down, buf))
+    out_buf = out_buf.reshape(E * capacity, d)
+
+    # ---- combine ------------------------------------------------------------
+    gathered = out_buf[slot] * jnp.where(keep, sw, 0.0)[:, None].astype(x.dtype)
+    out = jnp.zeros((T, d), x.dtype).at[st].add(gathered)
+
+    # ---- shared experts (qwen2-moe style, sigmoid-gated) --------------------
+    if p.shared_gate is not None:
+        h = jax.nn.silu(L.dense(x, p.shared_gate, cfg)) * L.dense(x, p.shared_up, cfg)
+        sh = L.dense(h, p.shared_down, cfg)
+        gate = jax.nn.sigmoid((x.astype(jnp.float32)) @ p.shared_router.astype(jnp.float32))
+        out = out + sh * gate.astype(x.dtype)
+
+    mask = jnp.zeros((T, E), jnp.float32).at[flat_t, flat_e].max(
+        jnp.ones_like(flat_w, jnp.float32)
+    )
+    aux = load_balance_loss(probs, mask)
+    return out, aux

@@ -1,0 +1,275 @@
+"""State-space sequence layers: Mamba-1 selective scan and Mamba-2 SSD.
+
+Both use chunked time processing so the (B, S, d_inner, N) discretized-state
+tensor never materializes for the full sequence:
+  * Mamba-1: lax.scan over time chunks, associative scan within a chunk.
+  * Mamba-2 (SSD): intra-chunk quadratic form + inter-chunk scalar-decay
+    recurrence (the minimal SSD algorithm from the Mamba-2 paper).
+
+Projections go through the approximate-multiplier ``dense``; the recurrence
+itself is elementwise/scan arithmetic (no multiplier arrays to approximate —
+noted in DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.approx import ApproxConfig, w_dim
+from repro.models import layers as L
+
+__all__ = [
+    "Mamba1Params", "init_mamba1", "mamba1_forward", "mamba1_decode_step",
+    "Mamba2Params", "init_mamba2", "mamba2_forward", "mamba2_decode_step",
+]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 (falcon-mamba-7b)
+# ---------------------------------------------------------------------------
+
+
+class Mamba1Params(NamedTuple):
+    in_proj: jax.Array     # (d, 2*di)
+    conv_w: jax.Array      # (cw, di) depthwise causal conv
+    conv_b: jax.Array      # (di,)
+    x_proj: jax.Array      # (di, dt_rank + 2*N)
+    dt_proj: jax.Array     # (dt_rank, di)
+    dt_bias: jax.Array     # (di,)
+    a_log: jax.Array       # (di, N)
+    d_skip: jax.Array      # (di,)
+    out_proj: jax.Array    # (di, d)
+
+
+def init_mamba1(key, d_model: int, d_inner: int, n_state: int, dt_rank: int, conv_w: int = 4) -> Mamba1Params:
+    ks = jax.random.split(key, 6)
+    return Mamba1Params(
+        in_proj=L.init_dense(ks[0], d_model, 2 * d_inner),
+        conv_w=0.1 * jax.random.normal(ks[1], (conv_w, d_inner)),
+        conv_b=jnp.zeros((d_inner,)),
+        x_proj=L.init_dense(ks[2], d_inner, dt_rank + 2 * n_state),
+        dt_proj=L.init_dense(ks[3], dt_rank, d_inner),
+        dt_bias=jnp.full((d_inner,), -4.6),  # softplus^-1(0.01)
+        a_log=jnp.log(
+            jnp.broadcast_to(jnp.arange(1, n_state + 1, dtype=jnp.float32), (d_inner, n_state))
+        ),
+        d_skip=jnp.ones((d_inner,)),
+        out_proj=L.init_dense(ks[5], d_inner, d_model),
+    )
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array, b: jax.Array, state: Optional[jax.Array] = None):
+    """x (B, S, di); w (cw, di). Returns (y, new_state) with state (B, cw-1, di)."""
+    cw = w.shape[0]
+    wd = w.astype(x.dtype)
+    if state is None:
+        state = jnp.zeros((x.shape[0], cw - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1], :] * wd[i] for i in range(cw)) + b.astype(x.dtype)
+    return y, xp[:, -(cw - 1) :, :]
+
+
+def _selective_scan_chunked(dA: jax.Array, dBx: jax.Array, h0: jax.Array, chunk: int):
+    """Linear recurrence h_t = dA_t * h_{t-1} + dBx_t over axis 1.
+
+    dA/dBx: (B, S, di, N); h0: (B, di, N).  Returns (h_all (B,S,di,N), h_last).
+    Chunked: sequential lax.scan over S/chunk blocks, associative scan inside.
+    """
+    B, S, di, N = dA.shape
+    nc = S // chunk
+    dA_c = dA.reshape(B, nc, chunk, di, N).swapaxes(0, 1)
+    dBx_c = dBx.reshape(B, nc, chunk, di, N).swapaxes(0, 1)
+
+    def combine(a, b):
+        (a1, b1), (a2, b2) = a, b
+        return a1 * a2, a2 * b1 + b2
+
+    def body(h, blk):
+        da, dbx = blk
+        aa, bb = jax.lax.associative_scan(combine, (da, dbx), axis=1)
+        h_blk = aa * h[:, None] + bb            # (B, chunk, di, N)
+        return h_blk[:, -1], h_blk
+
+    h_last, h_all = jax.lax.scan(body, h0, (dA_c, dBx_c))
+    h_all = h_all.swapaxes(0, 1).reshape(B, S, di, N)
+    return h_all, h_last
+
+
+def _mamba1_core(xz, p: Mamba1Params, cfg, conv_state, h0, chunk):
+    """Shared between train and decode. xz: (B, S, 2*di)."""
+    B, S, _ = xz.shape
+    di = w_dim(p.out_proj, 0)
+    N = p.a_log.shape[1]
+    dt_rank = w_dim(p.dt_proj, 0)
+    x, z = jnp.split(xz, 2, axis=-1)
+    x, conv_state = _causal_depthwise_conv(x, p.conv_w, p.conv_b, conv_state)
+    x = jax.nn.silu(x)
+    proj = L.dense(x, p.x_proj, cfg)
+    dt, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(L.dense(dt, p.dt_proj, cfg) + p.dt_bias.astype(x.dtype))  # (B,S,di)
+    A = -jnp.exp(p.a_log.astype(jnp.float32))                       # (di, N)
+    dA = jnp.exp(dt.astype(jnp.float32)[..., None] * A)             # (B,S,di,N)
+    dBx = (dt * x).astype(jnp.float32)[..., None] * Bc.astype(jnp.float32)[..., None, :]
+    if S == 1:
+        h = dA[:, 0] * h0 + dBx[:, 0]
+        h_all, h_last = h[:, None], h
+    else:
+        h_all, h_last = _selective_scan_chunked(dA, dBx, h0, min(chunk, S))
+    y = jnp.einsum("bsdn,bsn->bsd", h_all, Cc.astype(jnp.float32)).astype(x.dtype)
+    y = y + p.d_skip.astype(x.dtype) * x
+    y = y * jax.nn.silu(z)
+    return L.dense(y, p.out_proj, cfg), conv_state, h_last
+
+
+def mamba1_forward(x: jax.Array, p: Mamba1Params, *, cfg: ApproxConfig, chunk: int = 256):
+    """x (B, S, d) -> (y, (conv_state, ssm_state)) for cache seeding."""
+    B, S, _ = x.shape
+    di = w_dim(p.out_proj, 0)
+    N = p.a_log.shape[1]
+    xz = L.dense(x, p.in_proj, cfg)
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+    y, conv_state, h_last = _mamba1_core(xz, p, cfg, None, h0, chunk)
+    return y, (conv_state, h_last)
+
+
+def mamba1_decode_step(x, p: Mamba1Params, state, *, cfg: ApproxConfig):
+    """x (B, 1, d); state = (conv_state (B,cw-1,di), h (B,di,N))."""
+    conv_state, h = state
+    xz = L.dense(x, p.in_proj, cfg)
+    y, conv_state, h = _mamba1_core(xz, p, cfg, conv_state, h, 1)
+    return y, (conv_state, h)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 / SSD (zamba2)
+# ---------------------------------------------------------------------------
+
+
+class Mamba2Params(NamedTuple):
+    in_proj: jax.Array    # (d, 2*di + 2*N + nh)   -> x, z, B, C, dt
+    conv_w: jax.Array     # (cw, di + 2*N)
+    conv_b: jax.Array     # (di + 2*N,)
+    dt_bias: jax.Array    # (nh,)
+    a_log: jax.Array      # (nh,)
+    d_skip: jax.Array     # (nh,)
+    norm_g: jax.Array     # (di,) gated RMSNorm
+    out_proj: jax.Array   # (di, d)
+
+
+def init_mamba2(key, d_model: int, d_inner: int, n_state: int, n_heads: int, conv_w: int = 4) -> Mamba2Params:
+    ks = jax.random.split(key, 4)
+    conv_dim = d_inner + 2 * n_state
+    return Mamba2Params(
+        in_proj=L.init_dense(ks[0], d_model, 2 * d_inner + 2 * n_state + n_heads),
+        conv_w=0.1 * jax.random.normal(ks[1], (conv_w, conv_dim)),
+        conv_b=jnp.zeros((conv_dim,)),
+        dt_bias=jnp.zeros((n_heads,)),
+        a_log=jnp.zeros((n_heads,)),
+        d_skip=jnp.ones((n_heads,)),
+        norm_g=jnp.ones((d_inner,)),
+        out_proj=L.init_dense(ks[3], d_inner, d_model),
+    )
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """(..., c) log-decays -> (..., c, c) lower-tri cumulative sums."""
+    c = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(X, a_log_dt, Bm, Cm, h0, chunk: int):
+    """Minimal SSD (Mamba-2) over chunks.
+
+    X: (B, S, nh, hd); a_log_dt: (B, S, nh) per-step log decay (negative);
+    Bm/Cm: (B, S, N); h0: (B, nh, hd, N). Returns (Y, h_last).
+    """
+    Bsz, S, nh, hd = X.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    Xc = X.reshape(Bsz, nc, chunk, nh, hd)
+    Ac = a_log_dt.reshape(Bsz, nc, chunk, nh)
+    Bc = Bm.reshape(Bsz, nc, chunk, N)
+    Cc = Cm.reshape(Bsz, nc, chunk, N)
+
+    Acs = jnp.cumsum(Ac, axis=2)                                  # (B,nc,c,nh)
+    # intra-chunk (quadratic within chunk)
+    Lmat = jnp.exp(_segsum(Ac.swapaxes(2, 3)))                    # (B,nc,nh,c,c)
+    scores = jnp.einsum("bzin,bzjn->bzij", Cc, Bc)                # (B,nc,c,c)
+    Y_intra = jnp.einsum("bzhij,bzij,bzjhd->bzihd", Lmat, scores, Xc)
+    # chunk-end states
+    decay_to_end = jnp.exp(Acs[:, :, -1:, :] - Acs)               # (B,nc,c,nh)
+    states = jnp.einsum("bzch,bzcn,bzchd->bzhdn", decay_to_end, Bc, Xc)
+    # inter-chunk recurrence over z
+    chunk_decay = jnp.exp(Acs[:, :, -1, :])                       # (B,nc,nh)
+
+    def body(h, blk):
+        st, dec = blk                                             # (B,nh,hd,N), (B,nh)
+        h_new = h * dec[..., None, None] + st
+        return h_new, h
+    h_last, h_prevs = jax.lax.scan(
+        body, h0, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1))
+    )
+    h_prevs = h_prevs.swapaxes(0, 1)                              # (B,nc,nh,hd,N)
+    in_decay = jnp.exp(Acs)                                       # decay from chunk start
+    Y_inter = jnp.einsum("bzch,bzcn,bzhdn->bzchd", in_decay, Cc, h_prevs)
+    Y = (Y_intra + Y_inter).reshape(Bsz, S, nh, hd)
+    return Y, h_last
+
+
+def _mamba2_split(p: Mamba2Params, proj):
+    di = w_dim(p.out_proj, 0)
+    N = (p.conv_w.shape[1] - di) // 2
+    nh = p.a_log.shape[0]
+    z, xBC, dt = jnp.split(proj, [di, 2 * di + 2 * N], axis=-1)
+    return z, xBC, dt, di, N, nh
+
+
+def mamba2_forward(x: jax.Array, p: Mamba2Params, *, cfg: ApproxConfig, chunk: int = 256):
+    B, S, _ = x.shape
+    proj = L.dense(x, p.in_proj, cfg)
+    z, xBC, dt, di, N, nh = _mamba2_split(p, proj)
+    hd = di // nh
+    xBC, conv_state = _causal_depthwise_conv(xBC, p.conv_w, p.conv_b, None)
+    xBC = jax.nn.silu(xBC)
+    xs, Bm, Cm = jnp.split(xBC, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p.dt_bias)      # (B,S,nh)
+    a = -jnp.exp(p.a_log.astype(jnp.float32))                     # (nh,)
+    Xh = (xs.reshape(B, S, nh, hd).astype(jnp.float32)) * dt[..., None]
+    h0 = jnp.zeros((B, nh, hd, N), jnp.float32)
+    ck = min(chunk, S)
+    if S % ck != 0 or S == 1:
+        ck = 1 if S == 1 else S
+    Y, h_last = ssd_chunked(Xh, dt * a, Bm.astype(jnp.float32), Cm.astype(jnp.float32), h0, ck)
+    Y = Y + p.d_skip.astype(jnp.float32)[None, None, :, None] * xs.reshape(B, S, nh, hd).astype(jnp.float32)
+    y = Y.reshape(B, S, di).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), p.norm_g)
+    return L.dense(y, p.out_proj, cfg), (conv_state, h_last)
+
+
+def mamba2_decode_step(x, p: Mamba2Params, state, *, cfg: ApproxConfig):
+    """x (B, 1, d); state = (conv_state, h (B,nh,hd,N))."""
+    conv_state, h = state
+    B = x.shape[0]
+    proj = L.dense(x, p.in_proj, cfg)
+    z, xBC, dt, di, N, nh = _mamba2_split(p, proj)
+    hd = di // nh
+    xBC, conv_state = _causal_depthwise_conv(xBC, p.conv_w, p.conv_b, conv_state)
+    xBC = jax.nn.silu(xBC)
+    xs, Bm, Cm = jnp.split(xBC, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p.dt_bias)[:, 0]    # (B,nh)
+    a = -jnp.exp(p.a_log.astype(jnp.float32))
+    dA = jnp.exp(dt * a)                                              # (B,nh)
+    Xh = xs[:, 0].reshape(B, nh, hd).astype(jnp.float32) * dt[..., None]
+    h = h * dA[..., None, None] + jnp.einsum(
+        "bhd,bn->bhdn", Xh, Bm[:, 0].astype(jnp.float32)
+    )
+    Y = jnp.einsum("bhdn,bn->bhd", h, Cm[:, 0].astype(jnp.float32))
+    Y = Y + p.d_skip.astype(jnp.float32)[None, :, None] * xs[:, 0].reshape(B, nh, hd).astype(jnp.float32)
+    y = Y.reshape(B, 1, di).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), p.norm_g)
+    return L.dense(y, p.out_proj, cfg), (conv_state, h)

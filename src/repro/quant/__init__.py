@@ -1,0 +1,11 @@
+from repro.quant.affine import QuantParams, calibrate, dequantize, quantize
+from repro.quant.qat import band_regularizer, fake_quant
+
+__all__ = [
+    "QuantParams",
+    "calibrate",
+    "quantize",
+    "dequantize",
+    "fake_quant",
+    "band_regularizer",
+]

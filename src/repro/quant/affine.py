@@ -1,0 +1,59 @@
+"""Unsigned 8-bit affine quantization (paper Section IV platform substrate).
+
+The paper's multipliers are *unsigned* 8x8; real-valued tensors map onto
+uint8 codes via the standard affine scheme (Jacob et al., CVPR'18 — the
+paper's ref [15]):
+
+    x ~ s * (q - z),   q = clip(round(x / s) + z, 0, qmax)
+
+``qmax`` is configurable (< 255) to express the paper's co-optimization:
+retraining weights into the (0, 31) code band means quantizing with
+``qmax = 31`` so every weight code has its top three bits clear and the
+MUL8x8_3 removed-product path is error-free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["QuantParams", "calibrate", "quantize", "dequantize"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QuantParams:
+    """Affine quantization parameters. ``scale``/``zero_point`` broadcast
+    against the tensor (per-tensor: scalars; per-channel: shaped)."""
+
+    scale: jax.Array
+    zero_point: jax.Array            # int32, same shape as scale
+    qmax: int = dataclasses.field(default=255, metadata=dict(static=True))
+
+
+def calibrate(
+    x: jax.Array,
+    *,
+    axis: Optional[Tuple[int, ...]] = None,
+    qmax: int = 255,
+    eps: float = 1e-8,
+) -> QuantParams:
+    """Min/max affine calibration. ``axis=None`` -> per-tensor; otherwise the
+    reduction axes (remaining axes are per-channel)."""
+    lo = jnp.minimum(jnp.min(x, axis=axis, keepdims=axis is not None), 0.0)
+    hi = jnp.maximum(jnp.max(x, axis=axis, keepdims=axis is not None), 0.0)
+    scale = jnp.maximum((hi - lo) / float(qmax), eps).astype(jnp.float32)
+    zp = jnp.clip(jnp.round(-lo / scale), 0, qmax).astype(jnp.int32)
+    return QuantParams(scale=scale, zero_point=zp, qmax=qmax)
+
+
+def quantize(x: jax.Array, qp: QuantParams) -> jax.Array:
+    """Real -> uint8 codes in [0, qmax] (1-byte storage: HBM-roofline relevant)."""
+    q = jnp.round(x / qp.scale) + qp.zero_point
+    return jnp.clip(q, 0, qp.qmax).astype(jnp.uint8)
+
+
+def dequantize(q: jax.Array, qp: QuantParams) -> jax.Array:
+    return (q.astype(jnp.float32) - qp.zero_point.astype(jnp.float32)) * qp.scale

@@ -1,0 +1,51 @@
+"""Quantization-aware training utilities (the paper's retraining platform).
+
+* ``fake_quant``: quantize->dequantize with a straight-through estimator
+  (gradient passes where the value was inside the clip range).
+* ``band_regularizer``: the paper's "retraining by regularization" — a penalty
+  that pushes weight codes into a target band (e.g. (0, 31)) so that the
+  aggressive MUL8x8_3 multiplier (removed M2 partial product) stays accurate.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.affine import QuantParams, calibrate, dequantize, quantize
+
+__all__ = ["fake_quant", "band_regularizer"]
+
+
+def fake_quant(x: jax.Array, qp: QuantParams) -> jax.Array:
+    """Straight-through fake-quantization via stop_gradient algebra:
+    forward = dequantize(quantize(x)), backward = identity. Expressed
+    without custom_vjp so it stays transparent to remat/scan/vmap (the
+    out-of-band pull the clipped-STE variant provides is supplied by
+    ``band_regularizer`` instead — the paper's retraining mechanism)."""
+    sg = jax.lax.stop_gradient
+    zp = qp.zero_point.astype(x.dtype)
+    q = jnp.clip(jnp.round(x / qp.scale) + zp, 0, qp.qmax)
+    fq = (q - zp) * qp.scale
+    return x + sg(fq.astype(x.dtype) - x)
+
+
+def band_regularizer(
+    w: jax.Array,
+    qp: QuantParams,
+    *,
+    band: Tuple[int, int] = (0, 31),
+) -> jax.Array:
+    """Mean squared excursion of weight codes outside ``band``.
+
+    The code positions are computed with the real-valued (non-rounded) affine
+    map so the penalty is differentiable; minimizing it concentrates the
+    retrained weights in the band — the paper's hardware-driven
+    co-optimization that legitimizes removing the M2 partial product.
+    """
+    lo, hi = band
+    soft_code = w / qp.scale + qp.zero_point.astype(w.dtype)
+    under = jnp.maximum(float(lo) - soft_code, 0.0)
+    over = jnp.maximum(soft_code - float(hi), 0.0)
+    return jnp.mean(under**2 + over**2)

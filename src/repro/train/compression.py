@@ -1,0 +1,48 @@
+"""int8 gradient compression with error feedback.
+
+Models the compressed data-parallel all-reduce used at 1000+-node scale:
+gradients are quantized to int8 (per-leaf symmetric scale) before the
+all-reduce and dequantized after; the quantization residual is carried in an
+error-feedback buffer so the bias vanishes over steps (Seide et al. 2014,
+1-bit SGD lineage). Under pjit the quantize->psum->dequantize pattern is
+expressed here as quantize->dequantize around the (XLA-inserted) all-reduce;
+bytes on the wire shrink 4x (f32->int8), which is what the collective
+roofline term sees.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress_decompress"]
+
+
+def _q8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_decompress(
+    grads: Any, err: Optional[Any]
+) -> Tuple[Any, Any]:
+    """Returns (decompressed grads, new error buffers)."""
+    if err is None:
+        err = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def deq_of(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, s = _q8(gf)
+        return (q.astype(jnp.float32) * s).astype(g.dtype)
+
+    def err_of(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, s = _q8(gf)
+        return gf - q.astype(jnp.float32) * s
+
+    # two passes (XLA CSEs the shared subexpressions under jit)
+    new_g = jax.tree.map(deq_of, grads, err)
+    new_e = jax.tree.map(err_of, grads, err)
+    return new_g, new_e

@@ -1,0 +1,163 @@
+"""Training step and loop: QAT with approximate multipliers as the forward
+semantics, microbatched gradient accumulation, band regularization (the
+paper's retraining co-optimization), optional int8 gradient compression.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, Dict, Iterable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import forward, init_params
+from repro.quant.affine import calibrate
+from repro.quant.qat import band_regularizer
+from repro.train import optim as O
+from repro.train.compression import compress_decompress
+
+__all__ = ["TrainState", "cross_entropy", "make_loss_fn", "make_train_step", "train_loop"]
+
+
+TrainState = Dict[str, Any]   # {"params": ..., "opt": ..., "step": int array}
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token CE; logits (B,S,V) f32, labels (B,S) int32.
+
+    The gold logit is extracted with an iota-compare masked sum instead of
+    take_along_axis: a gather over the model-sharded vocab axis would force
+    GSPMD to all-gather the full logits."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    V = logits.shape[-1]
+    onehot = jnp.arange(V) == labels[..., None]
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    return jnp.mean(logz - gold)
+
+
+def _band_reg_term(cfg: ModelConfig, params) -> jax.Array:
+    """The paper's weight-band regularizer applied to every 2-D+ weight."""
+    a = cfg.approx
+    if a.band_reg <= 0:
+        return jnp.float32(0)
+    total, n = jnp.float32(0), 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        if leaf.ndim >= 2 and leaf.shape[-1] > 1:
+            qp = calibrate(leaf, axis=(leaf.ndim - 2,), qmax=a.w_qmax)
+            total = total + band_regularizer(leaf, qp, band=(0, 31))
+            n += 1
+    return a.band_reg * total / max(n, 1)
+
+
+def make_loss_fn(cfg: ModelConfig, aux_weight: float = 0.01) -> Callable:
+    def loss_fn(params, batch):
+        logits, aux = forward(cfg, params, batch)
+        ce = cross_entropy(logits, batch["labels"])
+        reg = _band_reg_term(cfg, params)
+        loss = ce + aux_weight * aux + reg
+        return loss, {"ce": ce, "aux": aux, "band_reg": reg}
+
+    return loss_fn
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: O.OptConfig,
+    *,
+    microbatch: int = 0,
+    grad_compression: bool = False,
+) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``microbatch``: if > 0, split the batch into that many accumulation steps
+    (sequential lax.scan — overlap-friendly: each microbatch's backward
+    all-reduces overlap the next microbatch's compute under XLA's latency-
+    hiding scheduler).
+    """
+    loss_fn = make_loss_fn(cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if microbatch <= 1:
+            (loss, m), grads = grad_fn(params, batch)
+            return loss, m, grads
+
+        def split(x):
+            return x.reshape(microbatch, x.shape[0] // microbatch, *x.shape[1:])
+
+        mb = jax.tree.map(split, batch)
+
+        def body(carry, mbatch):
+            acc, loss_acc = carry
+            (loss, m), grads = grad_fn(params, mbatch)
+            acc = jax.tree.map(jnp.add, acc, grads)
+            return (acc, loss_acc + loss), m
+
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gsum, loss_sum), ms = jax.lax.scan(body, (zero, jnp.float32(0)), mb)
+        grads = jax.tree.map(lambda g: g / microbatch, gsum)
+        m = jax.tree.map(lambda x: x[-1], ms)
+        return loss_sum / microbatch, m, grads
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        loss, m, grads = compute_grads(state["params"], batch)
+        if grad_compression:
+            grads, state_err = compress_decompress(grads, state.get("grad_err"))
+        else:
+            state_err = state.get("grad_err")
+        params, opt, om = O.apply_updates(opt_cfg, state["params"], grads, state["opt"])
+        new_state = {"params": params, "opt": opt}
+        if state_err is not None:
+            new_state["grad_err"] = state_err
+        return new_state, {"loss": loss, **m, **om}
+
+    return train_step
+
+
+def init_state(
+    cfg: ModelConfig, opt_cfg: O.OptConfig, key, *, grad_compression: bool = False
+) -> TrainState:
+    params = init_params(cfg, key)
+    state: TrainState = {"params": params, "opt": O.init_opt_state(opt_cfg, params)}
+    if grad_compression:
+        state["grad_err"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+    return state
+
+
+def train_loop(
+    cfg: ModelConfig,
+    opt_cfg: O.OptConfig,
+    batches: Iterable,
+    *,
+    steps: int,
+    key=None,
+    state: Optional[TrainState] = None,
+    hooks: Tuple[Callable, ...] = (),
+    jit: bool = True,
+) -> Tuple[TrainState, Dict[str, list]]:
+    """Single-host convenience loop used by examples/tests; the cluster path
+    is launch/train.py (pjit + checkpoint/restart + fault monitor)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    if state is None:
+        state = init_state(cfg, opt_cfg, key)
+    step_fn = make_train_step(cfg, opt_cfg)
+    if jit:
+        step_fn = jax.jit(step_fn)
+    history: Dict[str, list] = {"loss": [], "step_time": []}
+    it = iter(batches)
+    for i in range(steps):
+        batch = next(it)
+        t0 = time.perf_counter()
+        state, metrics = step_fn(state, batch)
+        metrics["loss"].block_until_ready()
+        dt = time.perf_counter() - t0
+        history["loss"].append(float(metrics["loss"]))
+        history["step_time"].append(dt)
+        for h in hooks:
+            h(i, state, metrics, dt)
+    return state, history

@@ -1,0 +1,120 @@
+"""Optimizers (AdamW, SGD+momentum), LR schedules, global-norm clipping.
+
+Implemented directly on pytrees (no optax dependency). Optimizer state
+mirrors the parameter tree structurally, so ZeRO-style sharded optimizer
+state falls out of the parameter shardings for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "OptConfig",
+    "init_opt_state",
+    "opt_state_shardings",
+    "apply_updates",
+    "global_norm",
+    "clip_by_global_norm",
+    "cosine_schedule",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"             # adamw | sgd
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    momentum: float = 0.9           # sgd
+    clip_norm: float = 1.0          # 0 disables
+    warmup_steps: int = 100
+    total_steps: int = 10000
+
+
+def cosine_schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1
+    )
+    return cfg.lr * warm * 0.5 * (1 + jnp.cos(jnp.pi * t))
+
+
+def init_opt_state(cfg: OptConfig, params: Any) -> Dict[str, Any]:
+    zeros = lambda: jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    state: Dict[str, Any] = {"step": jnp.zeros((), jnp.int32)}
+    if cfg.kind == "adamw":
+        state["m"] = zeros()
+        state["v"] = zeros()
+    elif cfg.kind == "sgd":
+        state["m"] = zeros()
+    else:
+        raise ValueError(cfg.kind)
+    return state
+
+
+def opt_state_shardings(cfg: OptConfig, param_sh: Any, mesh) -> Dict[str, Any]:
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    rep = NamedSharding(mesh, PartitionSpec())
+    out: Dict[str, Any] = {"step": rep}
+    if cfg.kind == "adamw":
+        out["m"] = param_sh
+        out["v"] = param_sh
+    else:
+        out["m"] = param_sh
+    return out
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda x: x * scale, tree), gn
+
+
+def apply_updates(
+    cfg: OptConfig, params: Any, grads: Any, state: Dict[str, Any]
+) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    """One optimizer step. Returns (new_params, new_state, metrics)."""
+    if cfg.clip_norm > 0:
+        grads, gn = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gn = global_norm(grads)
+    step = state["step"] + 1
+    lr = cosine_schedule(cfg, step)
+
+    if cfg.kind == "adamw":
+        b1, b2 = cfg.beta1, cfg.beta2
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            u = (m_ / c1) / (jnp.sqrt(v_ / c2) + cfg.eps)
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        new_state = {"step": step, "m": m, "v": v}
+    else:  # sgd + momentum
+        m = jax.tree.map(
+            lambda m_, g: cfg.momentum * m_ + g.astype(jnp.float32), state["m"], grads
+        )
+        new_params = jax.tree.map(
+            lambda p, m_: (p.astype(jnp.float32) - lr * m_).astype(p.dtype), params, m
+        )
+        new_state = {"step": step, "m": m}
+
+    return new_params, new_state, {"grad_norm": gn, "lr": lr}

@@ -1,0 +1,93 @@
+"""Frozen uint8 serving weights (QWeight) + fused-projection perf levers —
+both must preserve the multiplier semantics."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.core.approx import (
+    ApproxConfig,
+    QWeight,
+    approx_dense,
+    concat_weights,
+    prequantize_tree,
+)
+from repro.models.transformer import decode_step, forward, init_cache, init_params
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(**over):
+    return dataclasses.replace(
+        reduced_config(get_config("granite-3-2b")),
+        approx=ApproxConfig(multiplier="mul8x8_2", mode="lowrank"),
+        remat=False,
+        **over,
+    )
+
+
+def test_prequantize_selects_matmul_weights_only():
+    cfg = _cfg()
+    p = init_params(cfg, KEY)
+    pf = prequantize_tree(p, cfg.approx)
+    assert isinstance(pf["layers"]["attn"].wq, QWeight)
+    assert isinstance(pf["layers"]["ffn"].w_down, QWeight)
+    assert isinstance(pf["lm_head"], QWeight)
+    assert not isinstance(pf["embed"], QWeight)            # gather stays float
+    assert not isinstance(pf["final_norm"], QWeight)
+    assert pf["layers"]["attn"].wq.codes.dtype == jnp.uint8
+
+
+def test_frozen_dense_matches_dynamic():
+    cfg = ApproxConfig(multiplier="mul8x8_2", mode="lowrank")
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(48, 24)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(6, 48)), jnp.float32)
+    qw = prequantize_tree({"layers": {"attn_wq_like": {}}, "lm_head": w}, cfg)["lm_head"]
+    y_dyn = approx_dense(x, w, cfg)
+    y_frz = approx_dense(x, qw, cfg)
+    np.testing.assert_allclose(np.asarray(y_dyn), np.asarray(y_frz), rtol=1e-5, atol=1e-5)
+
+
+def test_concat_weights_frozen():
+    cfg = ApproxConfig(multiplier="mul8x8_2", mode="lowrank")
+    rng = np.random.default_rng(1)
+    w1 = jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)
+    w2 = jnp.asarray(rng.normal(size=(16, 4)), jnp.float32)
+    t = prequantize_tree({"lm_head": w1, "layers": {"x": {}}}, cfg)
+    q1 = t["lm_head"]
+    q2 = prequantize_tree({"lm_head": w2, "layers": {}}, cfg)["lm_head"]
+    qc = concat_weights([q1, q2], axis=1)
+    assert qc.codes.shape == (16, 12)
+    x = jnp.asarray(rng.normal(size=(3, 16)), jnp.float32)
+    y = approx_dense(x, qc, cfg)
+    y1 = approx_dense(x, q1, cfg)
+    y2 = approx_dense(x, q2, cfg)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(jnp.concatenate([y1, y2], -1)), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_fused_projections_bit_identical_lowrank():
+    cfg0 = _cfg()
+    cfg1 = dataclasses.replace(cfg0, fuse_qkv=True, fuse_gate_up=True)
+    p = init_params(cfg0, KEY)
+    b = {"tokens": jax.random.randint(KEY, (2, 12), 0, cfg0.vocab_size)}
+    l0, _ = forward(cfg0, p, b)
+    l1, _ = forward(cfg1, p, b)
+    # per-output-channel scales => fused quantization is bit-identical
+    assert float(jnp.max(jnp.abs(l0 - l1))) == 0.0
+
+
+def test_frozen_decode_matches_dynamic():
+    cfg = _cfg(q_chunk=16)
+    p = init_params(cfg, KEY)
+    pf = prequantize_tree(p, cfg.approx)
+    cache = init_cache(cfg, 2, 8, jnp.float32)
+    args = ({"tokens": jnp.ones((2, 1), jnp.int32)}, jnp.zeros((2,), jnp.int32))
+    l_dyn, _ = decode_step(cfg, p, cache, *args)
+    l_frz, _ = decode_step(cfg, pf, cache, *args)
+    np.testing.assert_allclose(np.asarray(l_dyn), np.asarray(l_frz), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,67 @@
+"""Hardware cost model + synthetic data pipeline."""
+import numpy as np
+import pytest
+
+from repro.core.hwcost import (
+    PAPER_TABLE_VI,
+    PAPER_TABLE_VII,
+    systolic_array_cost,
+    unit_gate_estimate,
+)
+from repro.data.synthetic import image_dataset, token_batches
+
+
+def test_paper_improvements_match_printed():
+    base = PAPER_TABLE_VI["exact3x3"]
+    imp1 = PAPER_TABLE_VI["mul3x3_1"].improvement_over(base)
+    imp2 = PAPER_TABLE_VI["mul3x3_2"].improvement_over(base)
+    assert imp1["area_pct"] == pytest.approx(36.17, abs=0.05)
+    assert imp2["area_pct"] == pytest.approx(31.38, abs=0.05)
+    assert imp1["power_pct"] == pytest.approx(35.66, abs=0.05)
+    assert imp2["power_pct"] == pytest.approx(36.73, abs=0.05)
+    assert imp1["delay_pct"] == pytest.approx(42.22, abs=0.05)
+    base8 = PAPER_TABLE_VII["exact8x8"]
+    for name, area in [("mul8x8_1", 19.93), ("mul8x8_2", 13.12), ("mul8x8_3", 23.27)]:
+        assert PAPER_TABLE_VII[name].improvement_over(base8)["area_pct"] == pytest.approx(area, abs=0.05)
+
+
+def test_unit_gate_trend():
+    """The structural estimate reproduces the ordering: approximate designs
+    are cheaper than exact; MUL8x8_3 (removed product) cheapest of the three."""
+    e1 = unit_gate_estimate("mul8x8_1")["relative_area"]
+    e2 = unit_gate_estimate("mul8x8_2")["relative_area"]
+    e3 = unit_gate_estimate("mul8x8_3")["relative_area"]
+    assert e1 < 1.0 and e2 < 1.0 and e3 < 1.0
+    assert e3 < e2
+
+
+def test_systolic_rollup():
+    c = systolic_array_cost("mul8x8_2")
+    assert c["macs"] == 128 * 128
+    assert 0 < c["area_saving_pct"] < 25
+    assert 0 < c["power_saving_pct"] < 30
+    ex = systolic_array_cost("exact")
+    assert ex["area_saving_pct"] == pytest.approx(0.0)
+
+
+def test_image_dataset_learnable_and_deterministic():
+    d1 = image_dataset("mnist", n_train=64, n_test=32, seed=3)
+    d2 = image_dataset("mnist", n_train=64, n_test=32, seed=3)
+    assert np.array_equal(d1.x_train, d2.x_train)
+    assert d1.x_train.shape == (64, 28, 28, 1)
+    assert d1.x_train.min() >= 0 and d1.x_train.max() <= 1
+    # classes are separable by template correlation
+    c = image_dataset("cifar10", n_train=16, n_test=8, seed=0)
+    assert c.x_train.shape == (16, 32, 32, 3)
+
+
+def test_token_batches_shapes_and_determinism():
+    it1 = token_batches(100, 2, 16, seed=5)
+    it2 = token_batches(100, 2, 16, seed=5)
+    t1, l1 = next(it1)
+    t2, l2 = next(it2)
+    assert np.array_equal(t1, t2)
+    assert t1.shape == (2, 16) and l1.shape == (2, 16)
+    # labels are next-token shifted
+    assert np.array_equal(t1[:, 1:], l1[:, :-1])
+    assert t1.max() < 100

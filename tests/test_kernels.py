@@ -1,0 +1,87 @@
+"""Pallas approx_matmul kernel vs the pure-jnp LUT oracle (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import multipliers as M
+from repro.kernels.approx_matmul.ops import approx_matmul_pallas
+from repro.kernels.approx_matmul.ref import approx_matmul_ref
+
+MULS = ("mul8x8_1", "mul8x8_2", "mul8x8_3")
+SHAPES = [
+    (8, 128, 128),
+    (16, 256, 64),
+    (128, 256, 128),
+    (5, 37, 11),       # ragged: exercises padding
+    (130, 300, 257),
+    (1, 1, 1),
+]
+
+
+@pytest.mark.parametrize("name", MULS)
+@pytest.mark.parametrize("shape", SHAPES)
+def test_kernel_matches_oracle(name, shape):
+    m, k, n = shape
+    rng = np.random.default_rng(hash((name, shape)) % 2**32)
+    a = rng.integers(0, 256, (m, k)).astype(np.uint8)
+    b = rng.integers(0, 256, (k, n)).astype(np.uint8)
+    lut = jnp.asarray(M.mul8x8_table(name))
+    ref = np.asarray(approx_matmul_ref(jnp.asarray(a), jnp.asarray(b), lut))
+    out = np.asarray(approx_matmul_pallas(jnp.asarray(a), jnp.asarray(b), multiplier=name))
+    assert np.array_equal(ref, out), (name, shape)
+
+
+@pytest.mark.parametrize("dtype", [jnp.uint8, jnp.int32])
+def test_kernel_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.integers(0, 256, (16, 128)), dtype)
+    b = jnp.asarray(rng.integers(0, 256, (128, 16)), dtype)
+    lut = jnp.asarray(M.mul8x8_table("mul8x8_2"))
+    ref = np.asarray(approx_matmul_ref(a, b, lut))
+    out = np.asarray(approx_matmul_pallas(a, b, multiplier="mul8x8_2"))
+    assert np.array_equal(ref, out)
+
+
+def test_kernel_batched_lhs():
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.integers(0, 256, (3, 4, 64)), jnp.uint8)
+    b = jnp.asarray(rng.integers(0, 256, (64, 8)), jnp.uint8)
+    lut = jnp.asarray(M.mul8x8_table("mul8x8_1"))
+    ref = np.asarray(approx_matmul_ref(a, b, lut))
+    out = np.asarray(approx_matmul_pallas(a, b, multiplier="mul8x8_1"))
+    assert out.shape == (3, 4, 8)
+    assert np.array_equal(ref, out)
+
+
+def test_kernel_range_pruned():
+    """rhs_max=31 prunes features; result must stay exact on the domain."""
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.integers(0, 256, (32, 128)), jnp.uint8)
+    b = jnp.asarray(rng.integers(0, 32, (128, 32)), jnp.uint8)
+    lut = jnp.asarray(M.mul8x8_table("mul8x8_2"))
+    ref = np.asarray(approx_matmul_ref(a, b, lut))
+    out = np.asarray(
+        approx_matmul_pallas(a, b, multiplier="mul8x8_2", rhs_max=31)
+    )
+    assert np.array_equal(ref, out)
+
+
+def test_kernel_k_tiling_exactness():
+    """K > bk exercises the int32 scratch accumulation across k-tiles."""
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(rng.integers(0, 256, (8, 1024)), jnp.uint8)
+    b = jnp.asarray(rng.integers(0, 256, (1024, 8)), jnp.uint8)
+    lut = jnp.asarray(M.mul8x8_table("mul8x8_2"))
+    ref = np.asarray(approx_matmul_ref(a, b, lut))
+    out = np.asarray(approx_matmul_pallas(a, b, multiplier="mul8x8_2", bk=256))
+    assert np.array_equal(ref, out)
+
+
+def test_elementwise_lut():
+    from repro.kernels.approx_matmul.ref import approx_mul_elementwise
+
+    lut = jnp.asarray(M.mul8x8_table("mul8x8_3"))
+    a = jnp.arange(256, dtype=jnp.int32)
+    out = np.asarray(approx_mul_elementwise(a[:, None], a[None, :], lut))
+    assert np.array_equal(out, np.asarray(lut))

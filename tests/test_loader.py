@@ -1,0 +1,40 @@
+"""Distributed loader: determinism, disjoint host slices, elastic resize."""
+import numpy as np
+
+from repro.data.loader import ShardedTokenLoader
+
+
+def test_deterministic_and_restartable():
+    l1 = ShardedTokenLoader(vocab=100, global_batch=4, seq_len=16, seed=7)
+    l2 = ShardedTokenLoader(vocab=100, global_batch=4, seq_len=16, seed=7)
+    b1 = l1.batch_at(5)
+    b2 = l2.batch_at(5)           # "restart" straight to step 5
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].shape == (4, 16)
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+
+
+def test_host_slices_partition_global_batch():
+    g = ShardedTokenLoader(vocab=50, global_batch=8, seq_len=8, seed=1)
+    full = g.batch_at(3)["tokens"]
+    parts = [
+        ShardedTokenLoader(vocab=50, global_batch=8, seq_len=8, seed=1,
+                           num_hosts=4, host_id=h).batch_at(3)["tokens"]
+        for h in range(4)
+    ]
+    np.testing.assert_array_equal(np.concatenate(parts), full)
+
+
+def test_elastic_resize_preserves_rows():
+    """Re-slicing 2 hosts -> 4 hosts mid-run yields the same global stream."""
+    two = [
+        ShardedTokenLoader(vocab=50, global_batch=8, seq_len=8, seed=2,
+                           num_hosts=2, host_id=h).batch_at(9)["tokens"]
+        for h in range(2)
+    ]
+    four = [
+        ShardedTokenLoader(vocab=50, global_batch=8, seq_len=8, seed=2,
+                           num_hosts=4, host_id=h).batch_at(9)["tokens"]
+        for h in range(4)
+    ]
+    np.testing.assert_array_equal(np.concatenate(two), np.concatenate(four))

@@ -1,0 +1,42 @@
+"""Bitwise (gather-free) multiplier logic == truth-table LUTs, including the
+second Pallas kernel (elementwise)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import multipliers as M
+from repro.core.logic import approx_mul3x3, approx_mul8x8_bitwise
+from repro.kernels.approx_mul_eltwise.ops import approx_mul_eltwise_pallas
+from repro.kernels.approx_mul_eltwise.ref import approx_mul_eltwise_ref
+
+
+def _grid(n):
+    a = np.arange(n)[:, None] * np.ones((1, n), np.int32)
+    b = np.arange(n)[None, :] * np.ones((n, 1), np.int32)
+    return jnp.asarray(a), jnp.asarray(b)
+
+
+def test_bitwise_3x3_matches_tables():
+    a, b = _grid(8)
+    assert np.array_equal(np.asarray(approx_mul3x3(a, b, 1)), M.mul3x3_1_table())
+    assert np.array_equal(np.asarray(approx_mul3x3(a, b, 2)), M.mul3x3_2_table())
+
+
+@pytest.mark.parametrize(
+    "design,removed,name",
+    [(1, False, "mul8x8_1"), (2, False, "mul8x8_2"), (2, True, "mul8x8_3")],
+)
+def test_bitwise_8x8_matches_luts(design, removed, name):
+    a, b = _grid(256)
+    got = np.asarray(approx_mul8x8_bitwise(a, b, design, removed))
+    assert np.array_equal(got, M.mul8x8_table(name))
+
+
+@pytest.mark.parametrize("name", ["mul8x8_1", "mul8x8_2", "mul8x8_3"])
+def test_eltwise_pallas_kernel(name):
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.integers(0, 256, (37, 21)), jnp.uint8)
+    b = jnp.asarray(rng.integers(0, 256, (37, 21)), jnp.uint8)
+    ref = np.asarray(approx_mul_eltwise_ref(a, b, name))
+    out = np.asarray(approx_mul_eltwise_pallas(a, b, multiplier=name, block=256))
+    assert np.array_equal(ref, out)

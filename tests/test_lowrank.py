@@ -1,0 +1,101 @@
+"""core/lowrank.py: the exact MXU decomposition of multiplier error."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lowrank as LR
+from repro.core import multipliers as M
+from repro.core.approx import ApproxConfig, quantized_matmul
+from repro.kernels.approx_matmul.ref import approx_matmul_ref
+
+MULS = ("mul8x8_1", "mul8x8_2", "mul8x8_3")
+
+
+@pytest.mark.parametrize("name", MULS)
+@pytest.mark.parametrize("side", ("lhs", "rhs"))
+def test_factorization_exact_full_domain(name, side):
+    c = LR.build_correction(name, side=side)
+    err_true = M.exact_table(8, 8).astype(np.int64) - M.mul8x8_table(name)
+    assert np.array_equal(c.error_table().astype(np.int64), err_true)
+
+
+@pytest.mark.parametrize("name", MULS)
+def test_feature_counts(name):
+    c = LR.build_correction(name, side="rhs")
+    assert c.num_features == (7 if name == "mul8x8_3" else 6)
+    # co-optimized weight band prunes to 3 and kills the rank-1 removal term
+    c31 = LR.build_correction(name, side="rhs", rhs_max=31)
+    assert c31.num_features == 3
+    assert all(f.kind == "indicator" for f in c31.features)
+
+
+@pytest.mark.parametrize("name", MULS)
+def test_range_pruned_exact_on_domain(name):
+    err_true = M.exact_table(8, 8).astype(np.int64) - M.mul8x8_table(name)
+    c = LR.build_correction(name, side="rhs", rhs_max=31)
+    assert np.array_equal(c.error_table().astype(np.int64)[:, :32], err_true[:, :32])
+    c2 = LR.build_correction(name, side="rhs", lhs_max=31, rhs_max=31)
+    assert np.array_equal(c2.error_table().astype(np.int64)[:32, :32], err_true[:32, :32])
+
+
+@pytest.mark.parametrize("name", MULS)
+def test_tables_bf16_exact(name):
+    """All u/v table values must be bf16-exact (the XLA path does bf16 dots)."""
+    for lm, rm in [(255, 255), (255, 31), (31, 31)]:
+        c = LR.build_correction(name, side="rhs", lhs_max=lm, rhs_max=rm)
+        for f in c.features:
+            for tab in (f.u_tab, f.v_tab):
+                rt = np.asarray(
+                    jnp.asarray(tab, jnp.float32).astype(jnp.bfloat16).astype(jnp.float32)
+                )
+                assert np.array_equal(rt, tab.astype(np.float32))
+
+
+def test_jnp_feature_maps_match_tables():
+    c = LR.build_correction("mul8x8_3", side="rhs")
+    codes = jnp.arange(256, dtype=jnp.uint8)
+    for f in c.features:
+        u = np.asarray(LR.u_map_jnp(codes, f.kind, f.u_shift, f.u_bits, f.residue))
+        v = np.asarray(LR.v_map_jnp(codes, f.v_terms))
+        assert np.array_equal(u, f.u_tab.astype(np.float32))
+        assert np.array_equal(v, f.v_tab.astype(np.float32))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.sampled_from(MULS),
+    st.integers(1, 12),
+    st.integers(1, 48),
+    st.integers(1, 12),
+    st.integers(0, 2**31 - 1),
+)
+def test_lowrank_matmul_matches_lut_oracle(name, m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 256, (m, k)).astype(np.uint8)
+    b = rng.integers(0, 256, (k, n)).astype(np.uint8)
+    lut = jnp.asarray(M.mul8x8_table(name))
+    ref = np.asarray(approx_matmul_ref(jnp.asarray(a), jnp.asarray(b), lut))
+    got = np.asarray(
+        quantized_matmul(jnp.asarray(a), jnp.asarray(b), ApproxConfig(multiplier=name, mode="lowrank"))
+    )
+    assert np.array_equal(ref, got.astype(np.int64))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_lowrank_range_pruned_matmul(seed):
+    """With weights in the co-optimized band the pruned 3-feature correction
+    still matches the LUT oracle bit-exactly."""
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 256, (7, 33)).astype(np.uint8)
+    b = rng.integers(0, 32, (33, 9)).astype(np.uint8)
+    lut = jnp.asarray(M.mul8x8_table("mul8x8_3"))
+    ref = np.asarray(approx_matmul_ref(jnp.asarray(a), jnp.asarray(b), lut))
+    got = np.asarray(
+        quantized_matmul(
+            jnp.asarray(a), jnp.asarray(b),
+            ApproxConfig(multiplier="mul8x8_3", mode="lowrank", w_qmax=31),
+        )
+    )
+    assert np.array_equal(ref, got.astype(np.int64))

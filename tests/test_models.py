@@ -1,0 +1,178 @@
+"""Per-architecture smoke tests (reduced configs, CPU) + layer correctness
+against naive references."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs, reduced_config
+from repro.core.approx import ApproxConfig
+from repro.models import ssm as S
+from repro.models.attention import attention_core
+from repro.models.moe import MoEParams, init_moe, moe_ffn
+from repro.models.transformer import decode_step, forward, init_cache, init_params
+
+ARCHS = list_archs()
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B, S_):
+    if cfg.embed_input:
+        return {"tokens": jnp.zeros((B, S_), jnp.int32)}
+    return {"embeddings": jax.random.normal(KEY, (B, S_, cfg.d_model), jnp.float32)}
+
+
+def test_all_ten_archs_registered():
+    assert len(ARCHS) == 10
+    for a in (
+        "musicgen-large", "yi-34b", "granite-3-2b", "deepseek-7b",
+        "deepseek-coder-33b", "falcon-mamba-7b", "qwen2-moe-a2.7b",
+        "grok-1-314b", "qwen2-vl-2b", "zamba2-2.7b",
+    ):
+        assert a in ARCHS
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_forward_and_train_step(arch):
+    """Reduced config: one forward + one train grad step, shape + finiteness."""
+    cfg = reduced_config(get_config(arch))
+    params = init_params(cfg, KEY)
+    B, S_ = 2, 16
+    batch = _batch(cfg, B, S_)
+    logits, aux = jax.jit(lambda p, b: forward(cfg, p, b))(params, batch)
+    assert logits.shape == (B, S_, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def loss(p):
+        lg, a = forward(cfg, p, batch)
+        return jnp.mean(lg[..., : cfg.vocab_size] ** 2) + 0.01 * a
+
+    g = jax.jit(jax.grad(loss))(params)
+    assert all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(g))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_decode(arch):
+    cfg = reduced_config(get_config(arch))
+    params = init_params(cfg, KEY)
+    B = 2
+    cache = init_cache(cfg, B, 32, jnp.float32)
+    db = _batch(cfg, B, 1)
+    logits, cache2 = jax.jit(lambda p, c, b, l: decode_step(cfg, p, c, b, l))(
+        params, cache, db, jnp.zeros((B,), jnp.int32)
+    )
+    assert logits.shape == (B, 1, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+def test_decode_matches_forward_dense():
+    """Teacher-forced decode through the KV cache must reproduce the
+    train-path logits (float mode, dense arch)."""
+    cfg = dataclasses.replace(
+        reduced_config(get_config("granite-3-2b")), remat=False, q_chunk=64
+    )
+    params = init_params(cfg, KEY)
+    B, S_ = 2, 12
+    toks = jax.random.randint(KEY, (B, S_), 0, cfg.vocab_size)
+    ref, _ = forward(cfg, params, {"tokens": toks})
+    cache = init_cache(cfg, B, S_, jnp.float32)
+    outs = []
+    for i in range(S_):
+        lg, cache = decode_step(
+            cfg, params, cache, {"tokens": toks[:, i : i + 1]},
+            jnp.full((B,), i, jnp.int32),
+        )
+        outs.append(lg[:, 0])
+    got = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=2e-2, atol=2e-3)
+
+
+def test_decode_matches_forward_ssm():
+    cfg = dataclasses.replace(reduced_config(get_config("falcon-mamba-7b")), remat=False)
+    params = init_params(cfg, KEY)
+    B, S_ = 1, 8
+    toks = jax.random.randint(KEY, (B, S_), 0, cfg.vocab_size)
+    ref, _ = forward(cfg, params, {"tokens": toks})
+    cache = init_cache(cfg, B, S_, jnp.float32)
+    outs = []
+    for i in range(S_):
+        lg, cache = decode_step(
+            cfg, params, cache, {"tokens": toks[:, i : i + 1]},
+            jnp.full((B,), i, jnp.int32),
+        )
+        outs.append(lg[:, 0])
+    got = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=2e-2, atol=2e-3)
+
+
+def test_attention_core_vs_naive():
+    B, S_, H, hd = 2, 32, 4, 16
+    q = jax.random.normal(KEY, (B, S_, H, hd), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S_, 2, hd), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S_, 2, hd), jnp.float32)
+    out = attention_core(q, k, v, causal=True, q_chunk=8)
+    # naive reference
+    kr = jnp.repeat(k, 2, axis=2)
+    vr = jnp.repeat(v, 2, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kr) / np.sqrt(hd)
+    mask = jnp.tril(jnp.ones((S_, S_), bool))
+    s = jnp.where(mask, s, -1e30)
+    ref = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1), vr)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-2, atol=2e-3)
+
+
+def test_mamba1_scan_vs_naive_recurrence():
+    B, S_, di, N = 1, 16, 4, 3
+    rng = np.random.default_rng(0)
+    dA = jnp.asarray(rng.uniform(0.5, 0.99, (B, S_, di, N)), jnp.float32)
+    dBx = jnp.asarray(rng.normal(size=(B, S_, di, N)), jnp.float32)
+    h0 = jnp.zeros((B, di, N))
+    h_all, h_last = S._selective_scan_chunked(dA, dBx, h0, chunk=4)
+    h = np.zeros((B, di, N), np.float32)
+    for t in range(S_):
+        h = np.asarray(dA[:, t]) * h + np.asarray(dBx[:, t])
+        np.testing.assert_allclose(np.asarray(h_all[:, t]), h, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_last), h, rtol=1e-4, atol=1e-5)
+
+
+def test_mamba2_ssd_vs_naive_recurrence():
+    B, S_, nh, hd, N = 1, 12, 2, 4, 3
+    rng = np.random.default_rng(1)
+    X = jnp.asarray(rng.normal(size=(B, S_, nh, hd)), jnp.float32)
+    a = jnp.asarray(rng.uniform(-0.5, -0.01, (B, S_, nh)), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(B, S_, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(B, S_, N)), jnp.float32)
+    h0 = jnp.zeros((B, nh, hd, N))
+    Y, h_last = S.ssd_chunked(X, a, Bm, Cm, h0, chunk=4)
+    # naive: h_t = exp(a_t) h_{t-1} + X_t B_t^T ; y_t = h_t C_t
+    h = np.zeros((B, nh, hd, N), np.float32)
+    for t in range(S_):
+        dec = np.exp(np.asarray(a[:, t]))[:, :, None, None]
+        h = dec * h + np.einsum("bhd,bn->bhdn", np.asarray(X[:, t]), np.asarray(Bm[:, t]))
+        y = np.einsum("bhdn,bn->bhd", h, np.asarray(Cm[:, t]))
+        np.testing.assert_allclose(np.asarray(Y[:, t]), y, rtol=1e-3, atol=1e-4)
+
+
+def test_moe_capacity_and_combine():
+    T, d, E, ff = 32, 8, 4, 16
+    p = init_moe(KEY, d, ff, E, shared_d_ff=8)
+    x = jax.random.normal(KEY, (T, d), jnp.float32)
+    out, aux = moe_ffn(x, p, top_k=2, cfg=ApproxConfig(mode="float"))
+    assert out.shape == (T, d)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    assert float(aux) > 0
+    # unrolled experts path must agree exactly
+    out2, _ = moe_ffn(x, p, top_k=2, cfg=ApproxConfig(mode="float"), unroll_experts=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2), rtol=1e-5, atol=1e-6)
+
+
+def test_scan_vs_unrolled_layers():
+    cfg = reduced_config(get_config("granite-3-2b"))
+    params = init_params(cfg, KEY)
+    batch = _batch(cfg, 2, 8)
+    l1, _ = forward(cfg, params, batch)
+    l2, _ = forward(dataclasses.replace(cfg, scan_layers=False), params, batch)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-4, atol=1e-5)

@@ -1,0 +1,104 @@
+"""Affine quantization + QAT substrate."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.approx import ApproxConfig, approx_dense
+from repro.quant.affine import calibrate, dequantize, quantize
+from repro.quant.qat import band_regularizer, fake_quant
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([255, 31]))
+def test_quant_roundtrip_error_bound(seed, qmax):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(32, 16)) * rng.uniform(0.1, 10), jnp.float32)
+    qp = calibrate(x, qmax=qmax)
+    err = np.asarray(jnp.abs(dequantize(quantize(x, qp), qp) - x))
+    assert err.max() <= 0.5001 * float(np.max(np.asarray(qp.scale)))
+
+
+def test_quantize_dtype_and_range():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(64,)), jnp.float32)
+    qp = calibrate(x, qmax=255)
+    q = quantize(x, qp)
+    assert q.dtype == jnp.uint8
+    assert int(q.max()) <= 255 and int(q.min()) >= 0
+
+
+def test_per_channel_calibration():
+    x = jnp.stack([jnp.linspace(-1, 1, 16), jnp.linspace(-100, 100, 16)], axis=1)
+    qp = calibrate(x, axis=(0,), qmax=255)
+    assert qp.scale.shape == (1, 2)
+    assert float(qp.scale[0, 1]) > float(qp.scale[0, 0])
+
+
+def test_zero_point_algebra_exact_multiplier():
+    """approx_dense with the EXACT multiplier must equal the float matmul of
+    the fake-quantized operands (the zero-point algebra identity)."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(8, 24)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(24, 8)), jnp.float32)
+    cfg = ApproxConfig(multiplier="exact", mode="exact_quant", w_per_channel=False)
+    y = approx_dense(x, w, cfg)
+    qx = calibrate(x, qmax=255)
+    qw = calibrate(w, qmax=255)
+    x_fq = dequantize(quantize(x, qx), qx)
+    w_fq = dequantize(quantize(w, qw), qw)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x_fq @ w_fq), rtol=2e-5, atol=2e-5)
+
+
+def test_fake_quant_ste_gradient_identity():
+    x = jnp.linspace(-1.0, 1.0, 11)
+    qp = calibrate(x, qmax=255)
+    g = jax.grad(lambda t: jnp.sum(fake_quant(t, qp) * 3.0))(x)
+    np.testing.assert_allclose(np.asarray(g), 3.0)
+
+
+def test_band_regularizer():
+    qp_scale = jnp.float32(1.0)
+    from repro.quant.affine import QuantParams
+
+    qp = QuantParams(scale=qp_scale, zero_point=jnp.int32(0), qmax=255)
+    w_in = jnp.asarray([1.0, 10.0, 31.0])
+    w_out = jnp.asarray([40.0, 64.0, 200.0])
+    assert float(band_regularizer(w_in, qp)) == 0.0
+    assert float(band_regularizer(w_out, qp)) > 0.0
+    # gradient points back toward the band
+    g = jax.grad(lambda w: band_regularizer(w, qp))(w_out)
+    assert bool(jnp.all(g > 0))
+
+
+def test_approx_dense_value_close_to_float():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(16, 64)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    y_f = x @ w
+    for mode, tol in [("exact_quant", 0.05), ("lowrank", 0.12)]:
+        y = approx_dense(x, w, ApproxConfig(multiplier="mul8x8_2", mode=mode))
+        rel = float(jnp.linalg.norm(y - y_f) / jnp.linalg.norm(y_f))
+        assert rel < tol, (mode, rel)
+
+
+def test_approx_dense_grads_flow():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(4, 16)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)
+    cfg = ApproxConfig(multiplier="mul8x8_2", mode="lowrank")
+    gx, gw = jax.grad(lambda x, w: jnp.sum(approx_dense(x, w, cfg) ** 2), argnums=(0, 1))(x, w)
+    assert bool(jnp.all(jnp.isfinite(gx))) and bool(jnp.all(jnp.isfinite(gw)))
+    assert float(jnp.linalg.norm(gw)) > 0
+
+
+def test_approx_dense_remat_transparent():
+    """No custom_vjp: jax.checkpoint must not raise and grads must match."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(4, 16)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)
+    cfg = ApproxConfig(multiplier="mul8x8_2", mode="lowrank")
+    f = lambda x, w: jnp.sum(approx_dense(x, w, cfg) ** 2)
+    g1 = jax.grad(f, argnums=1)(x, w)
+    g2 = jax.grad(jax.checkpoint(f), argnums=1)(x, w)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-6)

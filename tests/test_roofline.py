@@ -1,0 +1,72 @@
+"""Roofline machinery: HLO collective parsing, HBM traffic model, terms."""
+import pytest
+
+from repro.launch.roofline import (
+    CollectiveStats,
+    estimate_hbm_bytes,
+    parse_collectives,
+    roofline_terms,
+    PEAK_FLOPS,
+)
+
+HLO = """
+HloModule jit_f
+ENTRY %main {
+  %p0 = f32[16,1024]{1,0} parameter(0)
+  %ag = f32[1024,128]{1,0} all-gather(%p0), channel_id=1, replica_groups=[16,16]<=[16,16]T(1,0), dimensions={0}
+  %dot = f32[16,128]{1,0} dot(%p0, %ag), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[256,64]{1,0} all-reduce(%dot), channel_id=3, replica_groups={{0,1,2,3}}, to_apply=%add
+  %rs = f32[64,64]{1,0} reduce-scatter(%ar), channel_id=4, replica_groups=[8,2]<=[16], dimensions={0}
+  %cp = f32[8,8]{1,0} collective-permute(%rs), channel_id=5, source_target_pairs={{0,1}}
+  ROOT %out = f32[64,64]{1,0} add(%rs, %rs)
+}
+"""
+
+
+def test_parse_collectives():
+    st = parse_collectives(HLO)
+    assert st.counts["all-gather"] == 1
+    assert st.counts["all-reduce"] == 1
+    assert st.counts["reduce-scatter"] == 1
+    ag = 1024 * 128 * 4
+    assert st.per_op["all-gather"] == pytest.approx((16 - 1) / 16 * ag)
+    ar = 256 * 64 * 4
+    assert st.per_op["all-reduce"] == pytest.approx(2 * (4 - 1) / 4 * ar)
+    rs = 64 * 64 * 4
+    assert st.per_op["reduce-scatter"] == pytest.approx((2 - 1) / 2 * rs)
+    # collective-permute has no replica_groups= -> group size 1 -> skipped
+    assert st.total_bytes > 0
+
+
+def test_estimate_hbm_bytes_counts_dots_not_elementwise():
+    b = estimate_hbm_bytes(HLO)
+    # dot: p0 (64KB) + ag (512KB) + out (8KB); add excluded; collectives incl.
+    assert b >= 16 * 1024 * 4 + 1024 * 128 * 4 + 16 * 128 * 4
+
+
+def test_roofline_terms_dominance():
+    t = roofline_terms(
+        flops_per_device=1.97e14,      # 1s of compute
+        bytes_per_device=8.19e10,      # 0.1s of HBM
+        wire_bytes_per_device=5e9,     # 0.1s of ICI
+        n_devices=256,
+        model_flops_global=1.97e14 * 256 / 2,
+    )
+    assert t["bound"] == "compute"
+    assert t["t_compute_s"] == pytest.approx(1.0)
+    assert t["useful_flop_fraction"] == pytest.approx(0.5)
+    assert t["roofline_fraction"] == pytest.approx(0.5)
+
+
+def test_roofline_fraction_definition():
+    t = roofline_terms(
+        flops_per_device=1e12,
+        bytes_per_device=1e12,         # memory bound
+        wire_bytes_per_device=0,
+        n_devices=4,
+        model_flops_global=4e12,
+    )
+    assert t["bound"] == "memory"
+    # model flops per chip-second at the bound vs peak
+    expect = (4e12 / (1e12 / 819e9)) / 4 / PEAK_FLOPS
+    assert t["roofline_fraction"] == pytest.approx(expect)

@@ -1,0 +1,123 @@
+"""Training substrate: optimizer, loop, microbatching, regularized QAT."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.core.approx import ApproxConfig
+from repro.data.synthetic import token_batches
+from repro.models.transformer import init_params
+from repro.train import optim as O
+from repro.train.loop import cross_entropy, init_state, make_train_step, train_loop
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tiny_cfg(**over):
+    cfg = reduced_config(get_config("granite-3-2b"))
+    return dataclasses.replace(
+        cfg, num_layers=2, d_model=64, num_heads=2, num_kv_heads=1, head_dim=32,
+        d_ff=128, vocab_size=128, remat=False, **over
+    )
+
+
+def _batches(cfg, B=4, S=16):
+    it = token_batches(cfg.vocab_size, B, S, seed=0)
+    for toks, labels in it:
+        yield {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels)}
+
+
+def test_cross_entropy_matches_naive():
+    logits = jax.random.normal(KEY, (2, 4, 8))
+    labels = jax.random.randint(KEY, (2, 4), 0, 8)
+    ce = cross_entropy(logits, labels)
+    ref = -np.mean(
+        np.take_along_axis(
+            np.asarray(jax.nn.log_softmax(logits)), np.asarray(labels)[..., None], -1
+        )
+    )
+    assert float(ce) == pytest.approx(ref, rel=1e-5)
+
+
+def test_loss_decreases_float():
+    cfg = _tiny_cfg()
+    opt = O.OptConfig(kind="adamw", lr=3e-3, warmup_steps=5, total_steps=60, clip_norm=1.0)
+    _, hist = train_loop(cfg, opt, _batches(cfg), steps=30, key=KEY)
+    first = np.mean(hist["loss"][:5])
+    last = np.mean(hist["loss"][-5:])
+    assert last < first - 0.2, (first, last)
+
+
+def test_train_step_lowrank_qat_runs():
+    cfg = _tiny_cfg(approx=ApproxConfig(multiplier="mul8x8_2", mode="lowrank", band_reg=1e-4))
+    opt = O.OptConfig(lr=1e-3, total_steps=10)
+    state = init_state(cfg, opt, KEY)
+    step = jax.jit(make_train_step(cfg, opt))
+    batch = next(_batches(cfg))
+    state, m = step(state, batch)
+    assert np.isfinite(float(m["loss"]))
+    assert float(m["band_reg"]) >= 0
+    assert all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(state["params"]))
+
+
+def test_microbatch_grad_accum_equivalent():
+    cfg = _tiny_cfg()
+    opt = O.OptConfig(kind="sgd", lr=1e-2, clip_norm=0.0, warmup_steps=0)
+    state0 = init_state(cfg, opt, KEY)
+    batch = next(_batches(cfg, B=8))
+    s1, m1 = jax.jit(make_train_step(cfg, opt, microbatch=1))(
+        jax.tree.map(jnp.copy, state0), batch
+    )
+    s2, m2 = jax.jit(make_train_step(cfg, opt, microbatch=4))(
+        jax.tree.map(jnp.copy, state0), batch
+    )
+    for a, b in zip(jax.tree.leaves(s1["params"]), jax.tree.leaves(s2["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-5)
+
+
+def test_optimizers_step_and_shapes():
+    params = {"w": jnp.ones((4, 4)), "b": jnp.zeros((4,))}
+    grads = jax.tree.map(jnp.ones_like, params)
+    for kind in ("adamw", "sgd"):
+        cfg = O.OptConfig(kind=kind, lr=0.1, warmup_steps=0)
+        st = O.init_opt_state(cfg, params)
+        p2, st2, m = O.apply_updates(cfg, params, grads, st)
+        assert int(st2["step"]) == 1
+        assert float(m["grad_norm"]) > 0
+        assert jax.tree.structure(p2) == jax.tree.structure(params)
+        assert float(jnp.sum(jnp.abs(p2["w"] - params["w"]))) > 0
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full((10,), 10.0)}
+    clipped, gn = O.clip_by_global_norm(tree, 1.0)
+    assert float(gn) == pytest.approx(np.sqrt(1000), rel=1e-5)
+    assert float(O.global_norm(clipped)) == pytest.approx(1.0, rel=1e-4)
+
+
+def test_band_regularizer_moves_weights_into_band():
+    """The paper's co-optimization: retraining with the band regularizer must
+    reduce the fraction of weight codes above 31."""
+    from repro.quant.affine import calibrate, quantize
+
+    cfg = _tiny_cfg(approx=ApproxConfig(multiplier="mul8x8_3", mode="exact_quant", band_reg=10.0))
+    opt = O.OptConfig(lr=5e-3, total_steps=40, warmup_steps=0)
+
+    def frac_out(params):
+        out, tot = 0, 0
+        for leaf in jax.tree.leaves(params):
+            if leaf.ndim >= 2:
+                qp = calibrate(leaf, axis=(leaf.ndim - 2,), qmax=255)
+                q = np.asarray(quantize(leaf, qp))
+                out += (q > 31).sum()
+                tot += q.size
+        return out / tot
+
+    state = init_state(cfg, opt, KEY)
+    before = frac_out(state["params"])
+    state, _ = train_loop(cfg, opt, _batches(cfg), steps=25, state=state)
+    after = frac_out(state["params"])
+    assert after < before, (before, after)
