@@ -62,4 +62,44 @@ def run() -> List[Tuple[str, float, str]]:
     us = _time(fpal, a, b, iters=2)
     ok = bool(np.array_equal(np.asarray(fpal(a, b)), outs["lut"]))
     rows.append((f"kernel/pallas_interpret_{M_}x{K_}x{N_}", us, f"bitexact={ok}"))
+
+    rows.extend(_decode_bench())
+    return rows
+
+
+def _decode_bench(batch: int = 8, prompt_len: int = 8, max_new: int = 32):
+    """Decode throughput: legacy per-token Python loop vs the single-jit
+    scan engine, same tiny model (float mode isolates dispatch overhead)."""
+    import dataclasses
+
+    from repro.configs import get_config, reduced_config
+    from repro.models.transformer import init_params
+    from repro.serve.engine import generate, greedy_generate_legacy
+
+    cfg = dataclasses.replace(
+        reduced_config(get_config("granite-3-2b")), remat=False, q_chunk=64
+    )
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jax.random.randint(
+        jax.random.PRNGKey(1), (batch, prompt_len), 0, cfg.vocab_size
+    )
+
+    def legacy():
+        return greedy_generate_legacy(cfg, params, prompt, max_new=max_new)
+
+    def scan():
+        return generate(cfg, params, prompt, max_new=max_new)
+
+    rows = []
+    for name, fn in (("legacy_loop", legacy), ("scan_engine", scan)):
+        jax.block_until_ready(fn())              # compile + warm
+        t0 = time.perf_counter()
+        iters = 3
+        for _ in range(iters):
+            jax.block_until_ready(fn())
+        dt = (time.perf_counter() - t0) / iters
+        rows.append(
+            (f"serve/decode_{name}_b{batch}_n{max_new}", dt * 1e6,
+             f"{batch * max_new / dt:.1f} tok/s")
+        )
     return rows

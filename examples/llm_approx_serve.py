@@ -1,10 +1,13 @@
 """Example #3: batched serving under the approximate multiplier.
 
-Loads (or initializes) a small LM, runs batched greedy decoding through the
-KV-cache serve path with the exact vs approximate multiplier, and reports
-agreement + throughput — the serving-side counterpart of the QAT driver.
+Loads (or initializes) a small LM, runs batched decoding through the
+scan-based KV-cache engine under each execution mode — float, exact-quant,
+the XLA low-rank approximate path, and (with ``--pallas``) the fused Pallas
+approx-matmul kernel itself (interpret mode on CPU) — and reports agreement
+and throughput, plus the scan-vs-legacy-loop speedup.
 
     PYTHONPATH=src python examples/llm_approx_serve.py --batch 4 --new 16
+    PYTHONPATH=src python examples/llm_approx_serve.py --pallas --new 4
 """
 import argparse
 import dataclasses
@@ -14,9 +17,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, reduced_config
-from repro.core.approx import ApproxConfig
 from repro.models.transformer import init_params
-from repro.serve.engine import greedy_generate
+from repro.serve.engine import (
+    generate,
+    greedy_generate_legacy,
+    resolve_execution_mode,
+)
 
 
 def main():
@@ -25,6 +31,10 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--new", type=int, default=16)
     ap.add_argument("--multiplier", default="mul8x8_2")
+    ap.add_argument("--pallas", action="store_true",
+                    help="add an 'approx' arm that routes every projection "
+                         "matmul through the Pallas kernel (interpret mode "
+                         "on CPU — slow but bit-exact to the LUT)")
     args = ap.parse_args()
 
     base = dataclasses.replace(
@@ -35,26 +45,47 @@ def main():
     params = init_params(base, jax.random.PRNGKey(0))
     prompt = jax.random.randint(jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, base.vocab_size)
 
+    arms = [
+        ("float", resolve_execution_mode("exact")),
+        ("exact_quant", resolve_execution_mode("exact_quant")),
+        (args.multiplier, resolve_execution_mode("approx_lowrank", args.multiplier)),
+    ]
+    if args.pallas:
+        arms.append(("approx_pallas", resolve_execution_mode("approx", args.multiplier)))
+
     results = {}
-    for label, acfg in [
-        ("float", ApproxConfig(mode="float")),
-        ("exact_quant", ApproxConfig(multiplier="exact", mode="exact_quant")),
-        (args.multiplier, ApproxConfig(multiplier=args.multiplier, mode="lowrank")),
-    ]:
+    for label, acfg in arms:
         cfg = dataclasses.replace(base, approx=acfg)
+        new = min(args.new, 4) if label == "approx_pallas" else args.new
+        out = generate(cfg, params, prompt, max_new=new)       # compile
+        jax.block_until_ready(out)
         t0 = time.perf_counter()
-        out = greedy_generate(cfg, params, prompt, max_new=args.new)
+        out = generate(cfg, params, prompt, max_new=new)
         jax.block_until_ready(out)
         dt = time.perf_counter() - t0
-        tps = args.batch * args.new / dt
+        tps = args.batch * new / dt
         results[label] = out
         print(f"{label:12s}: {tps:8.1f} tok/s  sample: {out[0, args.prompt_len:].tolist()}")
+
+    # scan engine vs the legacy per-token Python loop (float arm)
+    jax.block_until_ready(greedy_generate_legacy(base, params, prompt, max_new=args.new))
+    t0 = time.perf_counter()
+    jax.block_until_ready(greedy_generate_legacy(base, params, prompt, max_new=args.new))
+    legacy_tps = args.batch * args.new / (time.perf_counter() - t0)
+    print(f"{'legacy loop':12s}: {legacy_tps:8.1f} tok/s  (float, per-token dispatch)")
 
     agree = float(jnp.mean(results["float"][:, args.prompt_len:] ==
                            results[args.multiplier][:, args.prompt_len:]))
     agree_q = float(jnp.mean(results["exact_quant"][:, args.prompt_len:] ==
                              results[args.multiplier][:, args.prompt_len:]))
     print(f"\ntoken agreement vs float: {agree*100:.1f}%; vs exact-quant: {agree_q*100:.1f}%")
+    if args.pallas:
+        n = results["approx_pallas"].shape[1] - args.prompt_len
+        agree_p = float(jnp.mean(
+            results["approx_pallas"][:, args.prompt_len:] ==
+            results[args.multiplier][:, args.prompt_len:args.prompt_len + n]
+        ))
+        print(f"pallas-kernel vs lowrank agreement (same semantics): {agree_p*100:.1f}%")
     print("(random-init model: near-uniform logits make argmax quant-sensitive;"
           " see examples/lenet_mnist_qat.py for the trained-model DAL story)")
 

@@ -7,6 +7,7 @@ semantically inert), and auto-selects interpret mode off-TPU.
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -14,6 +15,14 @@ import jax.numpy as jnp
 from repro.kernels.approx_matmul.kernel import approx_matmul_kernel_call
 
 __all__ = ["approx_matmul_pallas"]
+
+
+def _default_interpret() -> bool:
+    """Interpret off-TPU; REPRO_FORCE_INTERPRET=1 (set by the test session
+    fixture) forces it regardless of backend."""
+    if os.environ.get("REPRO_FORCE_INTERPRET", "") == "1":
+        return True
+    return jax.default_backend() != "tpu"
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
@@ -41,7 +50,7 @@ def approx_matmul_pallas(
     """a (..., M, K) codes x b (K, N) codes -> (..., M, N) int32 under the
     named approximate multiplier (bit-exact to the LUT oracle)."""
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = _default_interpret()
     *lead, M, K = a_codes.shape
     Kb, N = b_codes.shape
     assert K == Kb, (K, Kb)

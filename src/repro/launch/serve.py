@@ -1,7 +1,12 @@
-"""Serving launcher: batched greedy decoding on the local mesh.
+"""Serving launcher: batched decoding through the scan engine on the local
+mesh.
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --reduced \
-        --batch 4 --new 8
+        --batch 4 --new 8 --exec approx_lowrank
+
+``--exec`` selects the execution mode (exact / exact_quant / approx /
+approx_lowrank — see ``repro.serve.engine.resolve_execution_mode``);
+``--engine legacy`` runs the per-token Python loop baseline for comparison.
 """
 from __future__ import annotations
 
@@ -13,9 +18,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, reduced_config
-from repro.core.approx import ApproxConfig
-from repro.models.transformer import init_params
-from repro.serve.engine import greedy_generate
+from repro.serve.engine import (
+    EXECUTION_MODES,
+    SamplingConfig,
+    freeze_params,
+    generate,
+    greedy_generate_legacy,
+    resolve_execution_mode,
+)
 
 
 def main(argv=None):
@@ -26,24 +36,52 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--new", type=int, default=8)
     ap.add_argument("--multiplier", default="mul8x8_2")
-    ap.add_argument("--mode", default="lowrank")
+    ap.add_argument("--exec", dest="exec_mode", default="approx_lowrank",
+                    choices=EXECUTION_MODES)
+    ap.add_argument("--engine", default="scan", choices=("scan", "legacy"))
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--eos-id", type=int, default=-1)
+    ap.add_argument("--freeze-weights", action="store_true",
+                    help="pre-quantize matmul weights to uint8 QWeights")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = dataclasses.replace(reduced_config(cfg), remat=False, q_chunk=64)
-    cfg = dataclasses.replace(cfg, approx=ApproxConfig(multiplier=args.multiplier, mode=args.mode))
+    cfg = dataclasses.replace(
+        cfg, approx=resolve_execution_mode(args.exec_mode, args.multiplier)
+    )
     if not cfg.embed_input:
         raise SystemExit(f"{args.arch} takes embedding inputs (frontend stub); "
                          "use an embed-input arch for token serving")
+    from repro.models.transformer import init_params
+
     params = init_params(cfg, jax.random.PRNGKey(0))
-    prompt = jax.random.randint(jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size)
+    if args.freeze_weights:
+        params = freeze_params(cfg, params)
+    prompt = jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size
+    )
+    sampling = SamplingConfig(
+        temperature=args.temperature, top_k=args.top_k, eos_id=args.eos_id
+    )
+    if args.engine == "legacy" and sampling != SamplingConfig():
+        print("warning: --engine legacy is greedy-only; "
+              "--temperature/--top-k/--eos-id are ignored")
+
+    def run():
+        if args.engine == "legacy":
+            return greedy_generate_legacy(cfg, params, prompt, max_new=args.new)
+        return generate(cfg, params, prompt, max_new=args.new, sampling=sampling)
+
+    jax.block_until_ready(run())                 # compile once
     t0 = time.perf_counter()
-    out = greedy_generate(cfg, params, prompt, max_new=args.new)
+    out = run()
     jax.block_until_ready(out)
     dt = time.perf_counter() - t0
-    print(f"generated {args.batch}x{args.new} tokens in {dt:.2f}s "
-          f"({args.batch*args.new/dt:.1f} tok/s)")
+    print(f"[{args.engine}/{args.exec_mode}] generated {args.batch}x{args.new} tokens "
+          f"in {dt:.3f}s ({args.batch*args.new/dt:.1f} tok/s, post-compile)")
     print("sample:", out[0].tolist())
 
 

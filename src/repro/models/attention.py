@@ -20,7 +20,14 @@ import jax.numpy as jnp
 from repro.core.approx import ApproxConfig, concat_weights, w_dim
 from repro.models import layers as L
 
-__all__ = ["AttnParams", "init_attn", "attention_core", "self_attention", "decode_attention"]
+__all__ = [
+    "AttnParams",
+    "init_attn",
+    "attention_core",
+    "self_attention",
+    "decode_attention",
+    "seed_kv_cache",
+]
 
 _NEG = -1e30
 
@@ -201,6 +208,23 @@ def self_attention(
     out = attention_core(q, k, v, causal=True, q_chunk=q_chunk)
     out = L.dense(out.reshape(B, S, n_heads * hd), p.wo, cfg)
     return out, (k, v)
+
+
+def seed_kv_cache(
+    k_cache: jax.Array,           # (B, Smax, Hkv, hd)
+    v_cache: jax.Array,
+    k: jax.Array,                 # (B, S0, Hkv, hd) prefill keys (post-rope)
+    v: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """Write one layer's prefill K/V into positions [0, S0) of its decode
+    cache. The K returned by ``self_attention`` is already rotary-embedded at
+    positions 0..S0-1 — exactly what ``decode_attention`` would have written
+    step by step, so fused prefill and teacher-forced prefill seed identical
+    caches (tests/test_engine.py)."""
+    return (
+        jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype), (0, 0, 0, 0)),
+        jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype), (0, 0, 0, 0)),
+    )
 
 
 def decode_attention(

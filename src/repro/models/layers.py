@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.approx import ApproxConfig, approx_dense
+from repro.core.approx import ApproxConfig, QWeight, approx_dense
 
 __all__ = [
     "dense",
@@ -20,6 +20,7 @@ __all__ = [
     "rotary",
     "apply_rope",
     "apply_m_rope",
+    "sinusoidal_at",
     "sinusoidal_positions",
     "truncated_normal_init",
 ]
@@ -36,10 +37,10 @@ def init_dense(key, d_in: int, d_out: int, scale: float = 1.0) -> jax.Array:
 
 
 def dense(x: jax.Array, w, cfg: ApproxConfig) -> jax.Array:
-    """x (..., K) @ w (K, N) under the configured multiplier semantics.
-    ``w`` may be a frozen ``QWeight`` (serving path)."""
-    from repro.core.approx import QWeight
-
+    """x (..., K) @ w (K, N) under the configured multiplier semantics:
+    ``cfg.mode`` selects float, exact-quant, LUT, low-rank or the Pallas
+    kernel (the serving engine's ``exact``/``approx`` execution modes resolve
+    to these). ``w`` may be a frozen ``QWeight`` (serving path)."""
     if isinstance(w, QWeight):
         return approx_dense(x, w, cfg).astype(x.dtype)
     if cfg.mode == "float":

@@ -25,10 +25,23 @@ from repro.configs.base import ModelConfig
 from repro.core.approx import ApproxConfig, concat_weights, w_dim
 from repro.models import layers as L
 from repro.models import ssm as S
-from repro.models.attention import AttnParams, decode_attention, init_attn, self_attention
+from repro.models.attention import (
+    AttnParams,
+    decode_attention,
+    init_attn,
+    seed_kv_cache,
+    self_attention,
+)
 from repro.models.moe import MoEParams, init_moe, moe_ffn
 
-__all__ = ["init_params", "forward", "init_cache", "decode_step", "FFNParams"]
+__all__ = [
+    "init_params",
+    "forward",
+    "init_cache",
+    "seed_cache",
+    "decode_step",
+    "FFNParams",
+]
 
 
 class FFNParams(NamedTuple):
@@ -156,23 +169,31 @@ def _layer_slice(stacked, i):
     return jax.tree.map(lambda a: a[i], stacked)
 
 
-def _run_dense_like(cfg: ModelConfig, params, x, m_rope_pos=None):
+def _run_dense_like(cfg: ModelConfig, params, x, m_rope_pos=None, collect_kv: bool = False):
     """Scan over stacked layers (or unroll when cfg.scan_layers=False — used
-    by the dry-run's cost-extraction lowering); returns (x, aux_sum)."""
+    by the dry-run's cost-extraction lowering); returns (x, aux_sum) or, with
+    ``collect_kv``, (x, aux_sum, (k, v)) with k/v stacked (L, B, S, Hkv, hd)
+    — the fused-prefill cache seed."""
 
     def body(carry, layer):
         x, aux = carry
-        x, _, a = _attn_block(cfg, x, layer, m_rope_pos)
-        return (x, aux + a), None
+        x, kv, a = _attn_block(cfg, x, layer, m_rope_pos)
+        return (x, aux + a), (kv if collect_kv else None)
 
     fn = jax.checkpoint(body) if cfg.remat else body
     if cfg.scan_layers:
-        (x, aux), _ = jax.lax.scan(fn, (x, jnp.float32(0)), params["layers"])
-        return x, aux
+        (x, aux), kvs = jax.lax.scan(fn, (x, jnp.float32(0)), params["layers"])
+        return (x, aux, kvs) if collect_kv else (x, aux)
     carry = (x, jnp.float32(0))
+    kv_list = []
     for i in range(cfg.num_layers):
-        carry, _ = fn(carry, _layer_slice(params["layers"], i))
-    return carry
+        carry, kv = fn(carry, _layer_slice(params["layers"], i))
+        kv_list.append(kv)
+    x, aux = carry
+    if collect_kv:
+        kvs = jax.tree.map(lambda *xs: jnp.stack(xs), *kv_list)
+        return x, aux, kvs
+    return x, aux
 
 
 def _run_ssm(cfg: ModelConfig, params, x):
@@ -251,9 +272,14 @@ def forward(
     cfg: ModelConfig,
     params: Dict[str, Any],
     batch: Dict[str, jax.Array],
-) -> Tuple[jax.Array, jax.Array]:
+    *,
+    return_kv: bool = False,
+):
     """batch: {"tokens": (B,S) int32} or {"embeddings": (B,S,d)} (+ optional
-    "positions_thw" (B,3,S) for m_rope). Returns (logits (B,S,V), aux_loss)."""
+    "positions_thw" (B,3,S) for m_rope). Returns (logits (B,S,V), aux_loss),
+    or with ``return_kv`` (attention families only) (logits, aux, (k, v))
+    where k/v are stacked (L, B, S, Hkv, hd) — feed to ``seed_cache`` so
+    prefill seeds the decode cache in one fused pass."""
     from repro.parallel.sharding import constrain
 
     dtype = jnp.dtype(cfg.dtype)
@@ -270,10 +296,17 @@ def forward(
         S_ = x.shape[1]
         m_rope_pos = jnp.broadcast_to(jnp.arange(S_)[None, None, :], (x.shape[0], 3, S_))
 
+    kvs = None
     if cfg.family == "ssm":
+        if return_kv:
+            raise NotImplementedError("ssm has no attention KV; use decode-mode prefill")
         x, aux = _run_ssm(cfg, params, x)
     elif cfg.family == "hybrid":
+        if return_kv:
+            raise NotImplementedError("hybrid prefill needs conv/ssm state; use decode-mode prefill")
         x, aux = _run_hybrid(cfg, params, x)
+    elif return_kv:
+        x, aux, kvs = _run_dense_like(cfg, params, x, m_rope_pos, collect_kv=True)
     else:
         x, aux = _run_dense_like(cfg, params, x, m_rope_pos)
 
@@ -282,7 +315,8 @@ def forward(
     # keep the vocab axis model-sharded: the (B,S,V) f32 logits are the
     # single largest activation at 50k-150k vocabs
     logits = constrain(logits, ("batch", None, "model"))
-    return logits.astype(jnp.float32), aux
+    logits = logits.astype(jnp.float32)
+    return (logits, aux, kvs) if return_kv else (logits, aux)
 
 
 # ---------------------------------------------------------------------------
@@ -312,6 +346,14 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
         "k": jnp.zeros((cfg.num_layers, batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype),
         "v": jnp.zeros((cfg.num_layers, batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype),
     }
+
+
+def seed_cache(cfg: ModelConfig, cache, kvs) -> Dict[str, jax.Array]:
+    """Write fused-prefill K/V (from ``forward(..., return_kv=True)``) into a
+    fresh ``init_cache`` pytree at positions [0, S0) for every layer."""
+    k, v = kvs                                   # (L, B, S0, Hkv, hd)
+    kc, vc = jax.vmap(seed_kv_cache)(cache["k"], cache["v"], k, v)
+    return dict(cache, k=kc, v=vc)
 
 
 def decode_step(

@@ -1,0 +1,48 @@
+"""Shared test fixtures: src importability, deterministic seeding, and the
+session-wide Pallas interpret-mode flag for non-TPU backends."""
+from __future__ import annotations
+
+import os
+import pathlib
+import sys
+
+# `PYTHONPATH`-free importability: pyproject.toml sets pythonpath=["src"] for
+# pytest>=7; this fallback covers direct module imports and older runners.
+_SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session", autouse=True)
+def pallas_interpret_off_tpu():
+    """Force Pallas kernels into interpret mode for the whole session when no
+    TPU is attached (kernels/approx_matmul/ops.py honors the env flag)."""
+    import jax
+
+    if jax.default_backend() != "tpu":
+        os.environ["REPRO_FORCE_INTERPRET"] = "1"
+    yield
+
+
+@pytest.fixture(autouse=True)
+def _seed_global_numpy():
+    """Legacy global-state RNG users get a fixed seed per test."""
+    np.random.seed(0)
+    yield
+
+
+@pytest.fixture
+def rng():
+    """Deterministic numpy Generator."""
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def key():
+    """Deterministic jax PRNG key."""
+    import jax
+
+    return jax.random.PRNGKey(0)

@@ -78,6 +78,52 @@ def test_kernel_k_tiling_exactness():
     assert np.array_equal(ref, out)
 
 
+@pytest.mark.parametrize("name", MULS)
+def test_kernel_call_direct_matches_oracle(name):
+    """approx_matmul_kernel_call (interpret mode, block-multiple shapes)
+    against the dense-LUT reference — the raw kernel under the ops wrapper."""
+    from repro.kernels.approx_matmul.kernel import approx_matmul_kernel_call
+
+    rng = np.random.default_rng(hash(name) % 2**32)
+    a = jnp.asarray(rng.integers(0, 256, (16, 256)), jnp.uint8)
+    b = jnp.asarray(rng.integers(0, 256, (256, 128)), jnp.uint8)
+    lut = jnp.asarray(M.mul8x8_table(name))
+    ref = np.asarray(approx_matmul_ref(a, b, lut))
+    out = np.asarray(
+        approx_matmul_kernel_call(
+            a, b, multiplier=name, bm=16, bn=128, bk=256, interpret=True
+        )
+    )
+    assert np.array_equal(ref, out)
+
+
+@pytest.mark.parametrize("name", MULS)
+def test_ops_padding_path_non_block_multiple(name):
+    """A shape that is a multiple of no block dimension must go through the
+    ops.py zero-padding path and still match the LUT oracle bit-exactly."""
+    rng = np.random.default_rng(hash((name, "pad")) % 2**32)
+    a = jnp.asarray(rng.integers(0, 256, (13, 57)), jnp.uint8)
+    b = jnp.asarray(rng.integers(0, 256, (57, 29)), jnp.uint8)
+    lut = jnp.asarray(M.mul8x8_table(name))
+    ref = np.asarray(approx_matmul_ref(a, b, lut))
+    out = np.asarray(approx_matmul_pallas(a, b, multiplier=name))
+    assert out.shape == (13, 29)
+    assert np.array_equal(ref, out)
+
+
+def test_quantized_matmul_pallas_dispatch():
+    """ApproxConfig(mode='pallas') — the serving engine's 'approx' execution
+    mode — must dispatch through the kernel and agree with mode='lut'."""
+    from repro.core.approx import ApproxConfig, quantized_matmul
+
+    rng = np.random.default_rng(4)
+    a = jnp.asarray(rng.integers(0, 256, (6, 40)), jnp.uint8)
+    b = jnp.asarray(rng.integers(0, 256, (40, 10)), jnp.uint8)
+    got = quantized_matmul(a, b, ApproxConfig(multiplier="mul8x8_2", mode="pallas"))
+    ref = quantized_matmul(a, b, ApproxConfig(multiplier="mul8x8_2", mode="lut"))
+    assert np.array_equal(np.asarray(got), np.asarray(ref))
+
+
 def test_elementwise_lut():
     from repro.kernels.approx_matmul.ref import approx_mul_elementwise
 

@@ -1,7 +1,7 @@
 """Paper Section II/III: truth tables, aggregation, error metrics."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import multipliers as M
 from repro.core.metrics import multiplier_metrics
