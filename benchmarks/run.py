@@ -14,6 +14,7 @@ def main() -> None:
         ablation_removal,
         kernel_bench,
         roofline_summary,
+        serve_continuous,
         table_v,
         table_vi_vii,
         table_viii,
@@ -24,6 +25,7 @@ def main() -> None:
         ("table_vi_vii", lambda: table_vi_vii.run()),
         ("ablation", lambda: ablation_removal.run()),
         ("kernel", lambda: kernel_bench.run()),
+        ("serve_continuous", lambda: serve_continuous.run()),
         ("table_viii", lambda: table_viii.run(full=args.full)),
         ("roofline", lambda: roofline_summary.run()),
     ]

@@ -1,0 +1,201 @@
+"""Continuous-batching scheduler vs the PR-1 static-batch engine under a
+Poisson arrival trace of mixed-length requests.
+
+The static engine (``repro.serve.engine.generate``) serves requests in
+fixed batches: a batch pads every prompt to the group's bucket and decodes
+``max(max_new)`` steps for everyone, so short requests burn slot-steps
+behind the longest co-batched request.  The continuous scheduler
+(``repro.serve.scheduler.ServeSession``) refills each slot the moment its
+occupant finishes, so aggregate *useful* tokens/s tracks hardware decode
+throughput instead of the batch-max envelope.
+
+Both arms run post-compile (a full warm pass first) over the SAME trace,
+same slot/batch width, same prompt buckets.  The JSON artifact
+(``BENCH_serve_continuous.json``) records throughput, speedup, slot
+utilization, and the recompile count across the timed run (must be 0).
+
+    PYTHONPATH=src python benchmarks/serve_continuous.py
+    PYTHONPATH=src python benchmarks/serve_continuous.py --requests 48 --slots 8
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import numpy as np
+
+BUCKETS = (4, 8, 16)
+# heavy-tailed output budgets — the serving regime continuous batching is
+# for: a static batch decodes to the group max (48 whp), so its useful
+# fraction is mean/max ~ 0.33, while refilled slots track the mean
+NEW_CHOICES = (2, 4, 8, 16, 48)
+MAX_LEN = 64
+
+
+def _tiny_cfg(exec_mode: str = "exact"):
+    from repro.configs import get_config, reduced_config
+    from repro.serve.engine import resolve_execution_mode
+
+    return dataclasses.replace(
+        reduced_config(get_config("granite-3-2b")),
+        num_layers=4, d_model=256, num_heads=4, num_kv_heads=2, head_dim=64,
+        d_ff=512, vocab_size=1024, remat=False, q_chunk=64, dtype="float32",
+        approx=resolve_execution_mode(exec_mode),
+    )
+
+
+def build_trace(n: int, vocab: int, seed: int = 0, rate: float = 1.0):
+    """[(prompt, max_new, arrival_tick)] — Poisson arrival gaps (mean
+    ``rate`` ticks, i.e. ~1 request/decode-step: the heavy-traffic regime),
+    mixed prompt lengths and generation budgets (the max_new variance is
+    what the static engine pays for)."""
+    rng = np.random.default_rng(seed)
+    trace, t = [], 0
+    for _ in range(n):
+        t += int(rng.poisson(rate))
+        plen = int(rng.integers(2, BUCKETS[-1] + 1))
+        trace.append((
+            rng.integers(0, vocab, plen).astype(np.int32),
+            int(NEW_CHOICES[rng.integers(len(NEW_CHOICES))]),
+            t,
+        ))
+    return trace
+
+
+def run_continuous(cfg, params, trace, num_slots: int, steps_per_tick: int = 4):
+    """Warm pass (compiles every program), then a timed fresh-session pass.
+    Returns (tokens_per_s, stats, recompiles_during_timed_run, useful_tokens,
+    elapsed_s)."""
+    from repro.serve.scheduler import ServeSession, scheduler_compile_stats
+
+    def serve():
+        sess = ServeSession(cfg, params, num_slots=num_slots, max_len=MAX_LEN,
+                            prompt_buckets=BUCKETS,
+                            steps_per_tick=steps_per_tick)
+        for p, n, t in trace:
+            sess.submit(p, max_new=n, arrival=t)
+        sess.run()
+        return sess
+
+    warm = serve()
+    warm.warmup()                            # any program the trace missed
+    before = scheduler_compile_stats()
+    t0 = time.perf_counter()
+    sess = serve()
+    dt = time.perf_counter() - t0
+    recompiles = sum(scheduler_compile_stats().values()) - sum(before.values())
+    useful = sum(len(r.tokens) for r in sess.results.values())
+    return useful / dt, sess.stats, recompiles, useful, dt
+
+
+def run_static(cfg, params, trace, batch: int):
+    """PR-1 baseline: batches of ``batch`` in arrival order; prompts pad to
+    the group's bucket, decode runs to the group's max max_new. Useful
+    tokens = what each request actually asked for."""
+    from repro.serve.cache import PromptBuckets
+    from repro.serve.engine import generate
+
+    buckets = PromptBuckets(BUCKETS)
+    groups = []
+    for i in range(0, len(trace), batch):
+        chunk = trace[i:i + batch]
+        sb = max(buckets.bucket(len(p)) for p, _, _ in chunk)
+        prompts = np.zeros((len(chunk), sb), np.int32)
+        for j, (p, _, _) in enumerate(chunk):
+            prompts[j, : len(p)] = p
+        groups.append((prompts, max(n for _, n, _ in chunk),
+                       sum(n for _, n, _ in chunk)))
+
+    def serve():
+        total = 0
+        for prompts, max_new, useful in groups:
+            jax.block_until_ready(
+                generate(cfg, params, prompts, max_new=max_new, max_len=MAX_LEN)
+            )
+            total += useful
+        return total
+
+    serve()                                  # warm every group shape
+    t0 = time.perf_counter()
+    useful = serve()
+    dt = time.perf_counter() - t0
+    return useful / dt, useful, dt
+
+
+def bench(exec_mode: str = "exact", requests: int = 96, slots: int = 8,
+          seed: int = 0, steps_per_tick: int = 6):
+    from repro.models.transformer import init_params
+
+    cfg = _tiny_cfg(exec_mode)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    trace = build_trace(requests, cfg.vocab_size, seed=seed)
+    cont_tps, stats, recompiles, cont_tokens, cont_dt = run_continuous(
+        cfg, params, trace, slots, steps_per_tick=steps_per_tick
+    )
+    stat_tps, stat_tokens, stat_dt = run_static(cfg, params, trace, slots)
+    assert cont_tokens == stat_tokens, (cont_tokens, stat_tokens)
+    return {
+        "bench": "serve_continuous",
+        "exec_mode": exec_mode,
+        "requests": requests,
+        "slots": slots,
+        "seed": seed,
+        "steps_per_tick": steps_per_tick,
+        "prompt_buckets": list(BUCKETS),
+        "max_new_choices": list(NEW_CHOICES),
+        "useful_tokens": cont_tokens,
+        "continuous_tok_s": round(cont_tps, 1),
+        "static_tok_s": round(stat_tps, 1),
+        "speedup": round(cont_tps / stat_tps, 3),
+        "slot_utilization": round(stats.slot_utilization, 4),
+        "decode_ticks": stats.ticks,
+        "admit_calls": stats.admit_calls,
+        "recompiles_after_warmup": recompiles,
+        "continuous_s": round(cont_dt, 4),
+        "static_s": round(stat_dt, 4),
+    }
+
+
+def run(exec_mode: str = "exact", requests: int = 96, slots: int = 8):
+    """benchmarks/run.py entry: (name, us_per_call, derived) rows."""
+    r = bench(exec_mode=exec_mode, requests=requests, slots=slots)
+    per_tok_cont = 1e6 / r["continuous_tok_s"]
+    per_tok_stat = 1e6 / r["static_tok_s"]
+    return [
+        (f"serve/continuous_{exec_mode}_s{slots}", per_tok_cont,
+         f"{r['continuous_tok_s']} tok/s util={r['slot_utilization']}"),
+        (f"serve/static_batch_{exec_mode}_s{slots}", per_tok_stat,
+         f"{r['static_tok_s']} tok/s"),
+        (f"serve/continuous_speedup_{exec_mode}", 0.0,
+         f"{r['speedup']}x recompiles={r['recompiles_after_warmup']}"),
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--exec", dest="exec_mode", default="exact",
+                    choices=("exact", "exact_quant", "approx", "approx_lowrank"))
+    ap.add_argument("--requests", type=int, default=96)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=6,
+                    help="decode-chunk size (steps per dispatch)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_serve_continuous.json")
+    args = ap.parse_args()
+    r = bench(exec_mode=args.exec_mode, requests=args.requests,
+              slots=args.slots, seed=args.seed, steps_per_tick=args.steps)
+    with open(args.out, "w") as f:
+        json.dump(r, f, indent=2)
+        f.write("\n")
+    print(json.dumps(r, indent=2))
+    if r["speedup"] < 1.5:
+        print(f"WARNING: speedup {r['speedup']}x below the 1.5x target")
+    if r["recompiles_after_warmup"]:
+        print(f"WARNING: {r['recompiles_after_warmup']} recompiles after warmup")
+
+
+if __name__ == "__main__":
+    main()

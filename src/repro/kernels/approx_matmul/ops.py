@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels.approx_matmul.kernel import approx_matmul_kernel_call
 
-__all__ = ["approx_matmul_pallas"]
+__all__ = ["approx_matmul_pallas", "select_blocks"]
 
 
 def _default_interpret() -> bool:
@@ -33,6 +33,29 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
     pads = [(0, 0)] * x.ndim
     pads[axis] = (0, rem)
     return jnp.pad(x, pads)
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def select_blocks(
+    M: int, N: int, K: int, *, bm: int = 128, bn: int = 128, bk: int = 256
+) -> tuple[tuple[int, int, int], tuple[int, int, int]]:
+    """Block sizes and padded problem dims for an (M, K) x (K, N) call.
+
+    Problems smaller than a block shrink the block to the TPU-aligned
+    minimum that covers them — a multiple of 8 on the sublane (M) axis, a
+    multiple of 128 on the lane (N/K) axes — instead of the old
+    next-power-of-two rounding, which over-padded every non-pow2 row count
+    (M=24 slots padded to 32, M=65 to 128; M=1 decode rows pad to 8, the
+    sublane floor, not to bm=128).  Returns ``((bm_, bn_, bk_),
+    (Mp, Np, Kp))`` with each padded dim a multiple of its block.
+    """
+    bm_ = bm if M >= bm else max(8, _round_up(M, 8))
+    bn_ = bn if N >= bn else max(128, _round_up(N, 128))
+    bk_ = bk if K >= bk else max(128, _round_up(K, 128))
+    return (bm_, bn_, bk_), (_round_up(M, bm_), _round_up(N, bn_), _round_up(K, bk_))
 
 
 def approx_matmul_pallas(
@@ -55,10 +78,8 @@ def approx_matmul_pallas(
     Kb, N = b_codes.shape
     assert K == Kb, (K, Kb)
     a2 = a_codes.reshape(-1, K) if lead else a_codes
-    # shrink blocks for small problems (tests), keeping TPU-friendly minima
-    bm_ = min(bm, max(8, 1 << (max(a2.shape[0], 1) - 1).bit_length()))
-    bn_ = min(bn, max(128, 1 << (max(N, 1) - 1).bit_length())) if N < bn else bn
-    bk_ = min(bk, max(128, 1 << (max(K, 1) - 1).bit_length())) if K < bk else bk
+    # shrink blocks for small problems (decode M rows), keeping TPU minima
+    (bm_, bn_, bk_), _ = select_blocks(a2.shape[0], N, K, bm=bm, bn=bn, bk=bk)
     a2 = _pad_to(_pad_to(a2, 0, bm_), 1, bk_)
     b2 = _pad_to(_pad_to(b_codes, 0, bk_), 1, bn_)
     out = approx_matmul_kernel_call(

@@ -3,10 +3,14 @@ mesh.
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --reduced \
         --batch 4 --new 8 --exec approx_lowrank
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --reduced \
+        --engine continuous --requests 16 --num-slots 4
 
 ``--exec`` selects the execution mode (exact / exact_quant / approx /
 approx_lowrank — see ``repro.serve.engine.resolve_execution_mode``);
-``--engine legacy`` runs the per-token Python loop baseline for comparison.
+``--engine legacy`` runs the per-token Python loop baseline for comparison;
+``--engine continuous`` serves a mixed-length synthetic trace through the
+slot-based continuous-batching scheduler (``repro.serve.scheduler``).
 """
 from __future__ import annotations
 
@@ -16,6 +20,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config, reduced_config
 from repro.serve.engine import (
@@ -38,12 +43,18 @@ def main(argv=None):
     ap.add_argument("--multiplier", default="mul8x8_2")
     ap.add_argument("--exec", dest="exec_mode", default="approx_lowrank",
                     choices=EXECUTION_MODES)
-    ap.add_argument("--engine", default="scan", choices=("scan", "legacy"))
+    ap.add_argument("--engine", default="scan", choices=("scan", "legacy", "continuous"))
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--eos-id", type=int, default=-1)
     ap.add_argument("--freeze-weights", action="store_true",
                     help="pre-quantize matmul weights to uint8 QWeights")
+    ap.add_argument("--num-slots", type=int, default=4,
+                    help="continuous engine: decode slot pool size")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="continuous engine: synthetic trace length")
+    ap.add_argument("--max-len", type=int, default=128,
+                    help="continuous engine: per-slot cache capacity")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -69,6 +80,39 @@ def main(argv=None):
     if args.engine == "legacy" and sampling != SamplingConfig():
         print("warning: --engine legacy is greedy-only; "
               "--temperature/--top-k/--eos-id are ignored")
+
+    if args.engine == "continuous":
+        from repro.serve.scheduler import ServeSession
+
+        rng = np.random.default_rng(0)
+        # bucket set covers --prompt-len; cache covers the longest request
+        buckets = [8]
+        while buckets[-1] < args.prompt_len:
+            buckets.append(buckets[-1] * 2)
+        max_len = max(args.max_len, buckets[-1] + args.new)
+        sess = ServeSession(
+            cfg, params, num_slots=args.num_slots, max_len=max_len,
+            prompt_buckets=tuple(buckets), sampling=sampling,
+        )
+        sess.warmup()
+        for _ in range(args.requests):
+            plen = int(rng.integers(min(2, args.prompt_len), args.prompt_len + 1))
+            prompt = rng.integers(0, cfg.vocab_size, plen)
+            lo = min(max(2, args.new // 4), args.new)
+            max_new = int(rng.integers(lo, args.new + 1))
+            sess.submit(prompt, max_new=max_new)
+        t0 = time.perf_counter()
+        results = sess.run()
+        dt = time.perf_counter() - t0
+        generated = sum(len(r.tokens) for r in results.values())
+        st = sess.stats
+        print(f"[continuous/{args.exec_mode}] {len(results)} requests, "
+              f"{generated} tokens in {dt:.3f}s ({generated/dt:.1f} tok/s, "
+              f"post-compile), slot utilization {st.slot_utilization*100:.1f}% "
+              f"over {st.ticks} ticks x {args.num_slots} slots")
+        first = results[min(results)]
+        print("sample:", first.full_sequence.tolist())
+        return
 
     def run():
         if args.engine == "legacy":

@@ -1,0 +1,37 @@
+"""Serving: scan-based batched engine (PR 1) + continuous-batching
+scheduler over a slot-based KV cache (PR 2)."""
+from repro.serve.engine import (
+    EXECUTION_MODES,
+    GenerationState,
+    SamplingConfig,
+    freeze_params,
+    generate,
+    greedy_generate,
+    greedy_generate_legacy,
+    resolve_execution_mode,
+    select_token,
+)
+from repro.serve.scheduler import (
+    CompletedRequest,
+    Request,
+    SchedulerStats,
+    ServeSession,
+    scheduler_compile_stats,
+)
+
+__all__ = [
+    "EXECUTION_MODES",
+    "GenerationState",
+    "SamplingConfig",
+    "freeze_params",
+    "generate",
+    "greedy_generate",
+    "greedy_generate_legacy",
+    "resolve_execution_mode",
+    "select_token",
+    "CompletedRequest",
+    "Request",
+    "SchedulerStats",
+    "ServeSession",
+    "scheduler_compile_stats",
+]

@@ -1,0 +1,191 @@
+"""Slot-based KV cache management for continuous batching.
+
+The pooled decode cache is the ordinary ``transformer.init_cache`` pytree
+with ``batch == num_slots``: every leaf carries the slot axis at position 1
+((L, B, ...) for dense/ssm leaves, (n_groups, B, ...) for hybrid attention
+leaves).  That uniformity is what makes slot management a handful of pure tree ops:
+
+* ``scatter_rows``  — batched admission (the scheduler's production path):
+  write A request rows into their (distinct) slots in one scatter, with
+  invalid rows degenerating to exact no-ops so a fixed-width program admits
+  any number <= A of requests;
+* ``evict_slot``    — zero slot ``s`` (optional hygiene: stale rows above a
+  slot's ``cur_len`` are already invisible, because ``decode_attention``
+  masks keys past ``kv_len`` and overwrites position ``cur_len`` before
+  attending over it);
+* ``insert_slot`` / ``slot_view`` / ``insert_prefill_kv`` — the single-slot
+  primitives (scatter_rows restricted to A=1). The scheduler admits through
+  scatter_rows only; these exist for per-slot manipulation by tooling and
+  the ROADMAP sharded-slots follow-on (where a slot migrates between hosts
+  one at a time), and are pinned by tests/test_scheduler.py.
+
+All three take the slot index as a *traced* scalar, so one compiled program
+serves every slot — no shape depends on which slot is being filled.
+
+Host-side bookkeeping lives in ``SlotPool`` (free-list) and
+``PromptBuckets`` (fixed prompt-length buckets so prefill compiles once per
+bucket, never per request length).
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "insert_slot",
+    "insert_prefill_kv",
+    "scatter_rows",
+    "evict_slot",
+    "slot_view",
+    "PromptBuckets",
+    "SlotPool",
+]
+
+
+# ---------------------------------------------------------------------------
+# Pure cache-tree ops (jit-friendly, slot index traced)
+# ---------------------------------------------------------------------------
+
+
+def insert_slot(cache: Any, slot_cache: Any, slot: jax.Array) -> Any:
+    """Write a batch-1 cache pytree (leaves (L, 1, ...)) into slot ``slot``
+    of the pooled cache (leaves (L, B, ...))."""
+    return jax.tree.map(
+        lambda full, one: jax.lax.dynamic_update_slice_in_dim(
+            full, one.astype(full.dtype), slot, axis=1
+        ),
+        cache,
+        slot_cache,
+    )
+
+
+def slot_view(cache: Any, slot: jax.Array) -> Any:
+    """Batch-1 view of one slot (leaves (L, 1, ...))."""
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1), cache
+    )
+
+
+def evict_slot(cache: Any, slot: jax.Array) -> Any:
+    """Zero one slot's rows across every leaf. Correctness never requires
+    this (see module docstring); it exists for hygiene/debugging and is
+    exercised by the scheduler's ``zero_on_evict`` option."""
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_update_slice_in_dim(
+            a, jnp.zeros((a.shape[0], 1) + a.shape[2:], a.dtype), slot, axis=1
+        ),
+        cache,
+    )
+
+
+def scatter_rows(
+    full: jax.Array,
+    part: jax.Array,
+    slots: jax.Array,
+    valid: jax.Array,
+    s_cap: Optional[int] = None,
+) -> jax.Array:
+    """Write ``part`` (lead, A, [S,] ...) into batch rows ``slots`` of
+    ``full`` (lead, B, [Smax,] ...) — the batched-admission primitive.
+
+    ``slots`` must hold distinct row ids (the scheduler passes a permutation
+    of range(B)); rows with ``valid == False`` rewrite the values they
+    gathered — an exact no-op — which is how ONE fixed-width compiled
+    program admits any number <= A of requests.  ``s_cap`` restricts the
+    write to sequence positions [0, s_cap) (fused-prefill K/V, where
+    ``part`` covers only the prompt bucket)."""
+    vb = valid.reshape((1, -1) + (1,) * (full.ndim - 2))
+    if s_cap is None:
+        cur = full[:, slots]
+        part = jnp.where(vb, part.astype(full.dtype), cur)
+        return full.at[:, slots].set(part)
+    cur = full[:, slots, :s_cap]
+    part = jnp.where(vb, part.astype(full.dtype), cur)
+    return full.at[:, slots, :s_cap].set(part)
+
+
+def insert_prefill_kv(cache: Any, kvs: Tuple[jax.Array, jax.Array], slot: jax.Array) -> Any:
+    """Write fused-prefill K/V stacks (each (L, 1, S_bucket, Hkv, hd), from
+    ``forward(..., return_kv=True)`` on a batch-1 prompt) into positions
+    [0, S_bucket) of slot ``slot``.  Attention-family caches only."""
+    k, v = kvs
+    zeros = (0,) * (cache["k"].ndim - 2)
+    start = (0, slot) + zeros
+
+    def write(full, part):
+        return jax.lax.dynamic_update_slice(full, part.astype(full.dtype), start)
+
+    return dict(cache, k=write(cache["k"], k), v=write(cache["v"], v))
+
+
+# ---------------------------------------------------------------------------
+# Host-side bookkeeping
+# ---------------------------------------------------------------------------
+
+
+class PromptBuckets:
+    """Fixed prompt-length buckets: prefill compiles once per bucket size,
+    so no request length ever triggers a new compile."""
+
+    def __init__(self, sizes: Sequence[int]):
+        if not sizes:
+            raise ValueError("need at least one prompt bucket")
+        self.sizes: Tuple[int, ...] = tuple(sorted(set(int(s) for s in sizes)))
+        if self.sizes[0] < 1:
+            raise ValueError(f"bucket sizes must be >= 1, got {self.sizes}")
+
+    @property
+    def max_size(self) -> int:
+        return self.sizes[-1]
+
+    def bucket(self, prompt_len: int) -> int:
+        """Smallest bucket >= prompt_len."""
+        for s in self.sizes:
+            if prompt_len <= s:
+                return s
+        raise ValueError(
+            f"prompt_len={prompt_len} exceeds largest bucket {self.sizes[-1]}"
+        )
+
+    def pad(self, prompt: np.ndarray, pad_id: int = 0) -> np.ndarray:
+        """(S0,) -> (1, bucket) int32, zero-padded on the right.  Pad tokens
+        sit at positions >= prompt_len: causality keeps them out of every
+        real position's receptive field, and decode masks/overwrites their
+        cache rows before ever attending over them."""
+        n = int(prompt.shape[0])
+        b = self.bucket(n)
+        out = np.full((1, b), pad_id, np.int32)
+        out[0, :n] = prompt
+        return out
+
+
+class SlotPool:
+    """Free-list over ``num_slots`` decode slots."""
+
+    def __init__(self, num_slots: int):
+        if num_slots < 1:
+            raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        self.num_slots = num_slots
+        self._free: List[int] = list(range(num_slots))
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def busy_count(self) -> int:
+        return self.num_slots - len(self._free)
+
+    def acquire(self) -> Optional[int]:
+        return self._free.pop(0) if self._free else None
+
+    def release(self, slot: int) -> None:
+        if slot in self._free:
+            raise ValueError(f"slot {slot} double-released")
+        if not 0 <= slot < self.num_slots:
+            raise ValueError(f"slot {slot} out of range")
+        self._free.append(slot)
+        self._free.sort()

@@ -55,6 +55,7 @@ __all__ = [
     "greedy_generate_legacy",
     "prefill_step",
     "serve_step",
+    "select_token",
     "resolve_execution_mode",
     "freeze_params",
     "EXECUTION_MODES",
@@ -150,7 +151,7 @@ class GenerationState(NamedTuple):
     rng: jax.Array             # PRNG key threaded through sampling
 
 
-def _select_token(logits: jax.Array, sampling: SamplingConfig, rng) -> jax.Array:
+def select_token(logits: jax.Array, sampling: SamplingConfig, rng) -> jax.Array:
     """(B, V) logits -> (B,) int32 next tokens under the static sampling
     config (python branches are resolved at trace time)."""
     if sampling.temperature <= 0.0:
@@ -160,6 +161,10 @@ def _select_token(logits: jax.Array, sampling: SamplingConfig, rng) -> jax.Array
         kth = jax.lax.top_k(scaled, sampling.top_k)[0][..., -1:]
         scaled = jnp.where(scaled < kth, -1e30, scaled)
     return jax.random.categorical(rng, scaled, axis=-1).astype(jnp.int32)
+
+
+# historical private name (tests/test_engine.py pokes it directly)
+_select_token = select_token
 
 
 def _prefill_fused(cfg: ModelConfig, params, prompt_tokens, cache):

@@ -1,0 +1,638 @@
+"""Continuous-batching serve scheduler over a fixed pool of decode slots.
+
+The PR-1 engine (``repro.serve.engine.generate``) serves one fixed batch of
+same-length requests end-to-end: every request in the batch pays for the
+longest prompt and the largest ``max_new``.  ``ServeSession`` instead keeps
+a pool of ``num_slots`` decode slots hot and refills each slot from a
+request queue the moment its occupant finishes (EOS or max-token), so the
+approximate-multiplier matmuls stay saturated instead of idling behind the
+longest request.
+
+Everything runs under **fixed compiled shapes**:
+
+* ONE decode program per (config, sampling, num_slots, max_len) — a single
+  ``decode_step`` over the pooled cache each tick, all slots at once;
+* ONE prefill program per prompt-length *bucket* (``PromptBuckets``):
+  every admission in a tick shares a single batched (width ``num_slots``)
+  fused ``forward(return_kv=True)`` pass that seeds the freed slots' KV rows
+  and samples each first token (SSM/hybrid families fall back to a masked
+  teacher-forced scan inside the same jit); unadmitted rows degenerate to
+  exact no-ops (``cache.scatter_rows``), and the other slots' rows are
+  untouched.
+
+No request pattern (arrival order, prompt length, max_new mix) triggers a
+recompile after ``warmup()`` — asserted by ``compile_stats`` deltas in
+tests/test_scheduler.py.
+
+Sampling is per-request deterministic: each request gets
+``fold_in(session_key, req_id)`` and each sampled token position folds in
+its cache position, so a request's output is independent of which slot it
+lands in and of what else is in flight (bit-exact under float execution;
+quantized modes couple batch rows through the dynamic per-tensor activation
+scale, so there parity is statistical, not bitwise).
+
+Execution modes: the session serves whatever ``cfg.approx`` selects —
+``exact`` / ``exact_quant`` / ``approx`` (Pallas kernel) /
+``approx_lowrank`` — and accepts ``freeze_params`` QWeight trees.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import heapq
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import decode_step, forward, init_cache
+from repro.serve import cache as C
+from repro.serve.engine import SamplingConfig, select_token
+
+__all__ = [
+    "Request",
+    "CompletedRequest",
+    "SchedulerStats",
+    "ServeSession",
+    "scheduler_compile_stats",
+]
+
+
+# ---------------------------------------------------------------------------
+# Compiled programs (module-level jits: cfg/sampling static, shared cache)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "sampling", "steps"))
+def _decode_tick_jit(
+    cfg: ModelConfig,
+    params,
+    cache,
+    last_token: jax.Array,     # (N,) int32
+    cur_len: jax.Array,        # (N,) int32
+    active: jax.Array,         # (N,) bool
+    slot_keys: jax.Array,      # (N, 2) uint32 per-request PRNG keys
+    *,
+    sampling: SamplingConfig,
+    steps: int = 1,
+):
+    """``steps`` decode steps across all slots in one dispatch (decode
+    chunk).  Inactive slots compute garbage into their own rows only (masked
+    out here and overwritten at next admit).  Rows that finish mid-chunk
+    (eos here, max-token on the host) overshoot at most ``steps - 1``
+    positions; the host discards the extra tokens.  Overshoot cache writes
+    go through ``decode_attention``'s per-row ``.at[b, cur_len].set``
+    scatter, whose out-of-bounds updates are dropped (unlike
+    ``dynamic_update_slice``, which CLAMPS — do not swap the write path
+    without rechecking this); the hard guarantee, though, is ``submit``'s
+    ``prompt_len + max_new <= max_len`` bound: no attending row ever reads a
+    position an overshooting row could have written."""
+
+    def one(carry, _):
+        cache, last_token, cur_len, done = carry
+        logits, cache = decode_step(
+            cfg, params, cache, {"tokens": last_token[:, None]}, cur_len
+        )
+        # the sampled token lands at position cur_len + 1 -> unique, slot-
+        # and schedule-independent key per token
+        keys = jax.vmap(jax.random.fold_in)(slot_keys, cur_len + 1)
+        toks = jax.vmap(lambda l, k: select_token(l[None], sampling, k)[0])(
+            logits[:, 0, :], keys
+        )
+        if sampling.eos_id >= 0:
+            toks = jnp.where(done, jnp.int32(sampling.eos_id), toks)
+            done = done | (toks == sampling.eos_id)
+        toks = jnp.where(active, toks, 0)
+        last_token = jnp.where(active, toks, last_token)
+        return (cache, last_token, cur_len + active, done), toks
+
+    carry = (cache, last_token, cur_len, jnp.zeros_like(active))
+    (cache, _, _, _), toks = jax.lax.scan(one, carry, None, length=steps)
+    return cache, toks                      # toks: (steps, N)
+
+
+def _request_keys(base_key, req_ids):
+    """(A,) request ids -> (A, 2) per-request PRNG keys (computed in-jit so
+    admission costs no extra host dispatches)."""
+    return jax.vmap(jax.random.fold_in, in_axes=(None, 0))(base_key, req_ids)
+
+
+def _first_tokens(last_logits, req_keys, prompt_lens, sampling: SamplingConfig):
+    """(A, V) last-position logits -> (A,) first sampled tokens under the
+    per-request fold_in key schedule (position == prompt_len)."""
+    keys = jax.vmap(jax.random.fold_in)(req_keys, prompt_lens)
+    return jax.vmap(lambda l, k: select_token(l[None], sampling, k)[0])(
+        last_logits, keys
+    )
+
+
+_scatter_rows = C.scatter_rows
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "sampling"))
+def _admit_fused_jit(
+    cfg: ModelConfig,
+    params,
+    cache,
+    prompts: jax.Array,        # (A, S_bucket) int32, right-padded
+    prompt_lens: jax.Array,    # (A,) int32
+    slots: jax.Array,          # (A,) int32 — a permutation of range(num_slots)
+    valid: jax.Array,          # (A,) bool — rows actually being admitted
+    req_ids: jax.Array,        # (A,) int32
+    base_key: jax.Array,       # (2,) uint32 session key
+    *,
+    sampling: SamplingConfig,
+):
+    """Batched fused prefill-on-admit (attention families): ONE
+    full-sequence pass prefills every admission of this tick, seeds their
+    slots' KV rows [0, S_bucket), and samples each first token.  Compiled
+    once per bucket size; invalid rows are no-ops (see ``_scatter_rows``),
+    so 1..A admissions share the program."""
+    logits, _, kvs = forward(cfg, params, {"tokens": prompts}, return_kv=True)
+    last = jnp.take_along_axis(
+        logits, (prompt_lens - 1)[:, None, None], axis=1
+    )[:, 0, :]
+    k, v = kvs                                  # (L, A, S_bucket, Hkv, hd)
+    Sb = prompts.shape[1]
+    cache = dict(
+        cache,
+        k=_scatter_rows(cache["k"], k, slots, valid, s_cap=Sb),
+        v=_scatter_rows(cache["v"], v, slots, valid, s_cap=Sb),
+    )
+    req_keys = _request_keys(base_key, req_ids)
+    return cache, _first_tokens(last, req_keys, prompt_lens, sampling), req_keys
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "sampling", "max_len", "cache_dtype")
+)
+def _admit_decode_jit(
+    cfg: ModelConfig,
+    params,
+    cache,
+    prompts: jax.Array,        # (A, S_bucket) int32, right-padded
+    prompt_lens: jax.Array,    # (A,) int32
+    slots: jax.Array,          # (A,) int32 — a permutation of range(num_slots)
+    valid: jax.Array,          # (A,) bool
+    req_ids: jax.Array,        # (A,) int32
+    base_key: jax.Array,       # (2,) uint32 session key
+    *,
+    sampling: SamplingConfig,
+    max_len: int,
+    cache_dtype: str,
+):
+    """Batched teacher-forced prefill-on-admit for SSM/hybrid caches
+    (conv/ssm state has no fused seeding path): scan the bucket positions on
+    a fresh batch-A cache, freezing each row's state updates past its own
+    prompt_len, then scatter the rows into their slots."""
+    A, Sb = prompts.shape
+    slot_cache = init_cache(cfg, A, max_len, jnp.dtype(cache_dtype))
+
+    def body(carry, xs):
+        cache_c, last = carry
+        t, toks = xs
+        logits, new_cache = decode_step(
+            cfg, params, cache_c, {"tokens": toks[:, None]},
+            jnp.full((A,), t, jnp.int32),
+        )
+        take = t < prompt_lens                   # (A,) per-row freeze
+        cache_c = jax.tree.map(
+            lambda n, o: jnp.where(
+                take.reshape((1, A) + (1,) * (n.ndim - 2)), n, o
+            ),
+            new_cache,
+            cache_c,
+        )
+        last = jnp.where((t == prompt_lens - 1)[:, None], logits[:, 0, :], last)
+        return (cache_c, last), None
+
+    init = (slot_cache, jnp.zeros((A, cfg.padded_vocab), jnp.float32))
+    (slot_cache, last), _ = jax.lax.scan(
+        body, init, (jnp.arange(Sb, dtype=jnp.int32), prompts.T)
+    )
+    cache = jax.tree.map(
+        lambda full, part: _scatter_rows(full, part, slots, valid), cache, slot_cache
+    )
+    req_keys = _request_keys(base_key, req_ids)
+    return cache, _first_tokens(last, req_keys, prompt_lens, sampling), req_keys
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _evict_jit(cache, slot: jax.Array):
+    return C.evict_slot(cache, slot)
+
+
+def _jit_cache_size(fn) -> int:
+    """Compiled-program count of a jitted callable. ``_cache_size`` is a
+    private jax attribute (stable across 0.4.x); fall back to a sentinel
+    rather than crash serving if a jax upgrade drops it — the
+    zero-recompile tests compare these values, so a sentinel keeps the
+    deltas zero and surfaces the API break via the recorded -1."""
+    get = getattr(fn, "_cache_size", None)
+    return int(get()) if callable(get) else -1
+
+
+def scheduler_compile_stats() -> Dict[str, int]:
+    """Compiled-program counts of the scheduler's jit entry points.  A trace
+    that triggers zero recompiles leaves every count unchanged."""
+    return {
+        "decode_tick": _jit_cache_size(_decode_tick_jit),
+        "admit_fused": _jit_cache_size(_admit_fused_jit),
+        "admit_decode": _jit_cache_size(_admit_decode_jit),
+        "evict": _jit_cache_size(_evict_jit),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Requests / results / stats
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request. ``arrival`` is in scheduler ticks (one decode
+    step == one tick); ``priority`` orders admission (lower first, FIFO
+    within a class)."""
+
+    req_id: int
+    prompt: np.ndarray          # (S0,) int32
+    max_new: int
+    priority: int = 0
+    arrival: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class CompletedRequest:
+    req_id: int
+    prompt: np.ndarray
+    tokens: np.ndarray          # generated tokens (first token included)
+    finish_reason: str          # "eos" | "length"
+    admitted_tick: int
+    finished_tick: int
+
+    @property
+    def full_sequence(self) -> np.ndarray:
+        return np.concatenate([self.prompt, self.tokens])
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    ticks: int = 0                  # decode ticks executed
+    busy_slot_steps: int = 0        # sum over ticks of active slot count
+    idle_slot_steps: int = 0        # capacity - busy over executed ticks
+    admitted: int = 0
+    completed: int = 0
+    generated_tokens: int = 0       # across all requests (incl. admit token)
+    admit_calls: int = 0            # batched prefill dispatches
+    prefills: Dict[int, int] = dataclasses.field(default_factory=dict)  # bucket -> requests
+
+    @property
+    def slot_utilization(self) -> float:
+        cap = self.busy_slot_steps + self.idle_slot_steps
+        return self.busy_slot_steps / cap if cap else 0.0
+
+
+@dataclasses.dataclass
+class _ActiveSlot:
+    req: Request
+    slot: int
+    tokens: List[int]
+    admitted_tick: int
+
+
+# ---------------------------------------------------------------------------
+# ServeSession
+# ---------------------------------------------------------------------------
+
+
+class ServeSession:
+    """Continuous-batching serving over a slot pool (see module docstring).
+
+    >>> sess = ServeSession(cfg, params, num_slots=8, max_len=256)
+    >>> sess.submit(prompt_ids, max_new=64)
+    >>> results = sess.run()          # {req_id: CompletedRequest}
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        num_slots: int = 4,
+        max_len: int = 256,
+        prompt_buckets: Sequence[int] = (8, 16, 32, 64),
+        sampling: Optional[SamplingConfig] = None,
+        cache_dtype=jnp.float32,
+        seed: int = 0,
+        zero_on_evict: bool = False,
+        steps_per_tick: int = 1,
+    ):
+        if not cfg.embed_input:
+            raise ValueError(f"{cfg.name}: token serving requires an embed-input arch")
+        self.cfg = cfg
+        self.params = params
+        self.sampling = sampling if sampling is not None else SamplingConfig()
+        self.max_len = int(max_len)
+        self.buckets = C.PromptBuckets(prompt_buckets)
+        if self.buckets.max_size > self.max_len:
+            raise ValueError(
+                f"largest prompt bucket {self.buckets.max_size} > max_len {self.max_len}"
+            )
+        self.pool = C.SlotPool(num_slots)
+        self.num_slots = num_slots
+        self.cache_dtype = jnp.dtype(cache_dtype).name
+        self.zero_on_evict = zero_on_evict
+        if steps_per_tick < 1:
+            raise ValueError(f"steps_per_tick must be >= 1, got {steps_per_tick}")
+        # decode-chunk size: dispatches amortize steps_per_tick-fold, rows
+        # finishing mid-chunk waste <= steps_per_tick - 1 slot-steps each
+        self.steps_per_tick = int(steps_per_tick)
+        # SSM/hybrid caches carry conv/ssm state -> masked teacher-forced admit
+        self.prefill_mode = "decode" if cfg.family in ("ssm", "hybrid") else "fused"
+
+        self.cache = init_cache(cfg, num_slots, self.max_len, jnp.dtype(cache_dtype))
+        self._last_token = np.zeros((num_slots,), np.int32)
+        self._cur_len = np.zeros((num_slots,), np.int32)
+        self._slot_keys = np.zeros((num_slots, 2), np.uint32)
+        self._base_key = jax.random.PRNGKey(seed)
+
+        self._active: List[Optional[_ActiveSlot]] = [None] * num_slots
+        self._pending: List[Request] = []       # future arrivals, sorted
+        self._ready: List[Tuple[int, int, Request]] = []  # heap (priority, seq)
+        self._seq = 0
+        self._next_id = 0
+        self.clock = 0
+        self.stats = SchedulerStats()
+        self._completed: Dict[int, CompletedRequest] = {}
+        self._just_finished: List[int] = []     # drained by each step()
+
+    # -- queue ---------------------------------------------------------------
+
+    def submit(
+        self,
+        prompt,
+        max_new: int,
+        *,
+        req_id: Optional[int] = None,
+        priority: int = 0,
+        arrival: int = 0,
+    ) -> int:
+        """Queue one request; returns its id. ``arrival`` in ticks."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size < 1:
+            raise ValueError("empty prompt")
+        if max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {max_new}")
+        bucket = self.buckets.bucket(prompt.size)     # raises if no bucket fits
+        if max(bucket, prompt.size + max_new) > self.max_len:
+            raise ValueError(
+                f"prompt_len {prompt.size} + max_new {max_new} (bucket {bucket}) "
+                f"exceeds cache max_len {self.max_len}"
+            )
+        if req_id is None:
+            req_id = self._next_id
+        elif (
+            req_id in self._completed
+            or any(r.req_id == req_id for r in self._pending)
+            or any(r.req_id == req_id for _, _, r in self._ready)
+            or any(s is not None and s.req.req_id == req_id for s in self._active)
+        ):
+            raise ValueError(f"req_id {req_id} already in use")
+        self._next_id = max(self._next_id, req_id) + 1
+        req = Request(req_id, prompt, int(max_new), int(priority), int(arrival))
+        if req.arrival > self.clock:
+            self._pending.append(req)
+            self._pending.sort(key=lambda r: r.arrival)
+        else:
+            self._push_ready(req)
+        return req_id
+
+    def submit_all(self, requests: Sequence[Request]) -> None:
+        for r in requests:
+            self.submit(r.prompt, r.max_new, req_id=r.req_id,
+                        priority=r.priority, arrival=r.arrival)
+
+    def _push_ready(self, req: Request) -> None:
+        heapq.heappush(self._ready, (req.priority, self._seq, req))
+        self._seq += 1
+
+    # -- admission -----------------------------------------------------------
+
+    def _admit_width(self, n: int) -> int:
+        """Admission rows are width-bucketed to powers of two (capped at
+        ``num_slots``) so small admissions don't pay a full-width prefill:
+        the compiled-program set stays {1, 2, 4, ...} x prompt buckets."""
+        w = 1
+        while w < n:
+            w <<= 1
+        return min(w, self.num_slots)
+
+    def _admit_many(self, reqs: List[Request]) -> None:
+        """Admit up to ``num_slots`` requests with ONE prefill dispatch: all
+        prompts pad to the largest needed bucket, the row count pads to the
+        admit-width bucket, and padding rows are no-ops — so the compiled
+        program depends only on (admit width, prompt bucket)."""
+        assert 0 < len(reqs) <= self.pool.free_count
+        A = self._admit_width(len(reqs))
+        bucket = max(self.buckets.bucket(r.prompt.size) for r in reqs)
+        prompts = np.zeros((A, bucket), np.int32)
+        prompt_lens = np.ones((A,), np.int32)
+        valid = np.zeros((A,), bool)
+        req_ids = np.zeros((A,), np.int32)
+        # valid rows -> their acquired slots; padding rows -> distinct other
+        # slot ids, keeping `slots` collision-free (deterministic scatter,
+        # and the no-op rows rewrite rows they gathered — see _scatter_rows)
+        row_slot = [self.pool.acquire() for _ in reqs]
+        rest = [s for s in range(self.num_slots) if s not in row_slot]
+        slots = np.asarray((row_slot + rest)[:A], np.int32)
+        for i, req in enumerate(reqs):
+            plen = req.prompt.size
+            prompts[i, :plen] = req.prompt
+            prompt_lens[i] = plen
+            valid[i] = True
+            req_ids[i] = req.req_id
+        if self.prefill_mode == "fused":
+            self.cache, tok0s, req_keys = _admit_fused_jit(
+                cfg=self.cfg, params=self.params, cache=self.cache,
+                prompts=prompts, prompt_lens=prompt_lens, slots=slots,
+                valid=valid, req_ids=req_ids, base_key=self._base_key,
+                sampling=self.sampling,
+            )
+        else:
+            self.cache, tok0s, req_keys = _admit_decode_jit(
+                cfg=self.cfg, params=self.params, cache=self.cache,
+                prompts=prompts, prompt_lens=prompt_lens, slots=slots,
+                valid=valid, req_ids=req_ids, base_key=self._base_key,
+                sampling=self.sampling,
+                max_len=self.max_len, cache_dtype=self.cache_dtype,
+            )
+        tok0s = np.asarray(tok0s)
+        req_keys = np.asarray(req_keys, np.uint32)
+        self.stats.admit_calls += 1
+        self.stats.prefills[bucket] = self.stats.prefills.get(bucket, 0) + len(reqs)
+        eos = self.sampling.eos_id
+        for i, req in enumerate(reqs):
+            slot, tok0 = int(slots[i]), int(tok0s[i])
+            self._last_token[slot] = tok0
+            self._cur_len[slot] = int(prompt_lens[i])
+            self._slot_keys[slot] = req_keys[i]
+            self.stats.admitted += 1
+            self.stats.generated_tokens += 1
+            state = _ActiveSlot(req, slot, [tok0], self.clock)
+            if req.max_new == 1 or (eos >= 0 and tok0 == eos):
+                self._finish(state, "eos" if (eos >= 0 and tok0 == eos) else "length")
+            else:
+                self._active[slot] = state
+
+    def _finish(self, state: _ActiveSlot, reason: str) -> None:
+        self._active[state.slot] = None
+        self.pool.release(state.slot)
+        if self.zero_on_evict:
+            self.cache = _evict_jit(self.cache, np.int32(state.slot))
+        self.stats.completed += 1
+        self._just_finished.append(state.req.req_id)
+        self._completed[state.req.req_id] = CompletedRequest(
+            req_id=state.req.req_id,
+            prompt=state.req.prompt,
+            tokens=np.asarray(state.tokens, np.int32),
+            finish_reason=reason,
+            admitted_tick=state.admitted_tick,
+            finished_tick=self.clock,
+        )
+
+    # -- stepping ------------------------------------------------------------
+
+    def _pull_arrivals(self) -> None:
+        while self._pending and self._pending[0].arrival <= self.clock:
+            self._push_ready(self._pending.pop(0))
+
+    @property
+    def n_active(self) -> int:
+        return sum(s is not None for s in self._active)
+
+    @property
+    def drained(self) -> bool:
+        return not (self._pending or self._ready or self.n_active)
+
+    def _drain_finished(self) -> List[CompletedRequest]:
+        done = [self._completed[i] for i in self._just_finished]
+        self._just_finished.clear()
+        return done
+
+    def step(self) -> List[CompletedRequest]:
+        """Admit what fits, run one decode chunk, release finished slots.
+        Returns the requests completed during this call."""
+        self._pull_arrivals()
+        while self._ready and self.pool.free_count:
+            batch = [
+                heapq.heappop(self._ready)[2]
+                for _ in range(min(len(self._ready), self.pool.free_count))
+            ]
+            self._admit_many(batch)   # may free slots again (eos/max_new==1)
+
+        if self.n_active == 0:
+            # idle: jump to the next arrival instead of burning empty ticks
+            if self._pending:
+                self.clock = max(self.clock + 1, self._pending[0].arrival)
+            else:
+                self.clock += 1
+            return self._drain_finished()
+
+        active = np.asarray([s is not None for s in self._active], bool)
+        steps = self.steps_per_tick
+        self.cache, toks = _decode_tick_jit(
+            cfg=self.cfg, params=self.params, cache=self.cache,
+            last_token=self._last_token, cur_len=self._cur_len,
+            active=active, slot_keys=self._slot_keys, sampling=self.sampling,
+            steps=steps,
+        )
+        toks = np.asarray(toks)                  # (steps, N)
+        self.clock += steps
+        self.stats.ticks += steps
+
+        eos = self.sampling.eos_id
+        accepted = 0
+        for slot, state in enumerate(self._active):
+            if state is None:
+                continue
+            # device advanced this row all `steps` steps; host accepts tokens
+            # until the row finishes and discards the (bounded) overshoot
+            for s in range(steps):
+                tok = int(toks[s, slot])
+                state.tokens.append(tok)
+                accepted += 1
+                if eos >= 0 and tok == eos:
+                    self._finish(state, "eos")
+                    break
+                if len(state.tokens) >= state.req.max_new:
+                    self._finish(state, "length")
+                    break
+            self._cur_len[slot] = min(self._cur_len[slot] + steps, self.max_len - 1)
+            self._last_token[slot] = int(toks[steps - 1, slot])
+        self.stats.busy_slot_steps += accepted
+        self.stats.idle_slot_steps += self.num_slots * steps - accepted
+        self.stats.generated_tokens += accepted
+        return self._drain_finished()
+
+    def run(self, max_steps: Optional[int] = None) -> Dict[int, CompletedRequest]:
+        """Drive until every queued request completes, or ``max_steps``
+        calls to ``step()`` (each executes up to ``steps_per_tick`` decode
+        ticks — a watchdog on scheduler iterations, not device ticks)."""
+        n = 0
+        while not self.drained:
+            self.step()
+            n += 1
+            if max_steps is not None and n >= max_steps:
+                break
+        return dict(self._completed)
+
+    @property
+    def results(self) -> Dict[int, CompletedRequest]:
+        return dict(self._completed)
+
+    # -- warmup / compile accounting ------------------------------------------
+
+    def warmup(self) -> Dict[str, int]:
+        """Compile the decode tick and every prompt-bucket prefill program
+        up-front (results discarded — session state is untouched). After
+        this, no request pattern recompiles; returns ``compile_stats``."""
+        widths = sorted({self._admit_width(n) for n in range(1, self.num_slots + 1)})
+        for A in widths:
+            for b in self.buckets.sizes:
+                prompts = np.zeros((A, b), np.int32)
+                prompt_lens = np.ones((A,), np.int32)
+                slots = np.arange(A, dtype=np.int32)
+                valid = np.zeros((A,), bool)    # all rows no-op: state safe
+                req_ids = np.zeros((A,), np.int32)
+                if self.prefill_mode == "fused":
+                    out = _admit_fused_jit(
+                        cfg=self.cfg, params=self.params, cache=self.cache,
+                        prompts=prompts, prompt_lens=prompt_lens, slots=slots,
+                        valid=valid, req_ids=req_ids, base_key=self._base_key,
+                        sampling=self.sampling,
+                    )
+                else:
+                    out = _admit_decode_jit(
+                        cfg=self.cfg, params=self.params, cache=self.cache,
+                        prompts=prompts, prompt_lens=prompt_lens, slots=slots,
+                        valid=valid, req_ids=req_ids, base_key=self._base_key,
+                        sampling=self.sampling,
+                        max_len=self.max_len, cache_dtype=self.cache_dtype,
+                    )
+                jax.block_until_ready(out)
+        out = _decode_tick_jit(
+            cfg=self.cfg, params=self.params, cache=self.cache,
+            last_token=self._last_token, cur_len=self._cur_len,
+            active=np.zeros((self.num_slots,), bool),
+            slot_keys=self._slot_keys, sampling=self.sampling,
+            steps=self.steps_per_tick,
+        )
+        jax.block_until_ready(out)
+        if self.zero_on_evict:
+            jax.block_until_ready(_evict_jit(self.cache, np.int32(0)))
+        return self.compile_stats()
+
+    def compile_stats(self) -> Dict[str, int]:
+        return scheduler_compile_stats()

@@ -131,3 +131,40 @@ def test_elementwise_lut():
     a = jnp.arange(256, dtype=jnp.int32)
     out = np.asarray(approx_mul_elementwise(a[:, None], a[None, :], lut))
     assert np.array_equal(out, np.asarray(lut))
+
+
+# ---------------------------------------------------------------------------
+# Block selection (ops.py shrink logic) — pinned padded shapes
+# ---------------------------------------------------------------------------
+
+
+def test_select_blocks_pinned_shapes():
+    """Regression pin for the block-shrink rounding: small M shrinks to the
+    8-sublane multiple covering it (NOT the next power of two, NOT bm)."""
+    from repro.kernels.approx_matmul.ops import select_blocks
+
+    # M=1: single-row decode — 8 rows of padding, not 128
+    assert select_blocks(1, 10, 64) == ((8, 128, 128), (8, 128, 128))
+    # M=4: a 4-slot decode batch pads to 8 rows
+    assert select_blocks(4, 512, 256) == ((8, 128, 256), (8, 512, 256))
+    # M=24: 24-slot decode stays exact (old pow2 rounding padded to 32)
+    assert select_blocks(24, 300, 256) == ((24, 128, 256), (24, 384, 256))
+    # M=65: pads to 72 (old pow2 rounding padded to 128)
+    assert select_blocks(65, 128, 512) == ((72, 128, 256), (72, 128, 512))
+    # at/above full blocks: unchanged behavior
+    assert select_blocks(128, 128, 256) == ((128, 128, 256), (128, 128, 256))
+    assert select_blocks(130, 257, 300) == ((128, 128, 256), (256, 384, 512))
+    # tiny K/N still hit the 128-lane minimum
+    assert select_blocks(8, 1, 1) == ((8, 128, 128), (8, 128, 128))
+
+
+@pytest.mark.parametrize("m", [1, 4, 24, 65])
+def test_shrunk_blocks_stay_bit_exact(m):
+    """The shrunk block shapes must not change results: bit-exact vs LUT."""
+    rng = np.random.default_rng(m)
+    a = jnp.asarray(rng.integers(0, 256, (m, 96)), jnp.uint8)
+    b = jnp.asarray(rng.integers(0, 256, (96, 33)), jnp.uint8)
+    lut = jnp.asarray(M.mul8x8_table("mul8x8_2"))
+    ref = np.asarray(approx_matmul_ref(a, b, lut))
+    out = np.asarray(approx_matmul_pallas(a, b, multiplier="mul8x8_2"))
+    assert np.array_equal(ref, out)

@@ -1,0 +1,141 @@
+"""Property-based differential tests: ``approx_matmul_pallas`` must be
+bit-exact to the ``mul8x8_table`` LUT oracle on EVERY shape, not just the
+hand-picked ones in test_kernels.py.
+
+Runs through ``_hypothesis_compat``: real ``hypothesis`` when installed,
+otherwise a deterministic seeded fallback with the same assertions.
+
+Coverage axes:
+* random M/N/K including odd / prime / non-multiple-of-block sizes;
+* leading batch dimensions on the lhs (1 and 2 extra dims);
+* every kernel-supported multiplier (the aggregated designs with a low-rank
+  factorization: exact + mul8x8_1/2/3 — pkm/etm have no aggregation spec,
+  so the kernel rejects them, pinned below);
+* pruned operand ranges (the paper's co-optimized (0,31) bands).
+
+Marked ``slow``: each example pads to >= (8, 128) x (128, 128) interpret-mode
+kernel work; CI runs these in the second-tier job.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import multipliers as M
+from repro.kernels.approx_matmul.ops import approx_matmul_pallas, select_blocks
+from repro.kernels.approx_matmul.ref import approx_matmul_ref
+
+pytestmark = pytest.mark.slow
+
+# Multipliers the Pallas/low-rank path supports: those with an aggregation
+# spec (lowrank.build_correction). pkm/etm are LUT/ref-only designs.
+KERNEL_MULTIPLIERS = tuple(
+    name for name in M.MULTIPLIERS if name not in ("pkm", "etm")
+)
+
+
+def _codes(rng: np.random.Generator, shape, high: int):
+    return jnp.asarray(rng.integers(0, high + 1, shape), jnp.uint8)
+
+
+def _seed(*parts) -> int:
+    """Deterministic example seed from ints/registry names — NOT Python
+    hash(), whose per-process str randomization would make a failing
+    counterexample irreproducible."""
+    acc = 0
+    for p in parts:
+        acc = (acc * 1_000_003 + (M.MULTIPLIERS.index(p) if isinstance(p, str) else int(p))) % 2**32
+    return acc
+
+
+def _check(a, b, name: str):
+    lut = jnp.asarray(M.mul8x8_table(name))
+    ref = np.asarray(approx_matmul_ref(a, b, lut))
+    out = np.asarray(approx_matmul_pallas(a, b, multiplier=name))
+    assert out.shape == ref.shape
+    assert np.array_equal(ref, out), (name, a.shape, b.shape)
+
+
+def test_kernel_multiplier_registry_is_exhaustive():
+    """Every registered multiplier either runs through the kernel or is
+    pinned as a known ref-only design — no silent third category."""
+    from repro.core import lowrank as lr
+
+    for name in M.MULTIPLIERS:
+        if name in KERNEL_MULTIPLIERS:
+            lr.build_correction(name, side="rhs")   # must not raise
+        else:
+            with pytest.raises(KeyError):
+                lr.build_correction(name, side="rhs")
+    assert set(KERNEL_MULTIPLIERS) == {"exact", "mul8x8_1", "mul8x8_2", "mul8x8_3"}
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(1, 40),                      # M
+    st.integers(1, 40),                      # N
+    st.integers(1, 70),                      # K
+    st.sampled_from(KERNEL_MULTIPLIERS),
+    st.integers(0, 2**31 - 1),               # data seed
+)
+def test_pallas_matches_lut_oracle_random_shapes(m, n, k, name, seed):
+    rng = np.random.default_rng(seed)
+    _check(_codes(rng, (m, k), 255), _codes(rng, (k, n), 255), name)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.integers(1, 3),                       # leading batch dim
+    st.integers(1, 3),                       # second batch dim (1 == absent)
+    st.integers(1, 12),                      # M
+    st.integers(1, 24),                      # N
+    st.integers(1, 48),                      # K
+    st.sampled_from(KERNEL_MULTIPLIERS),
+)
+def test_pallas_matches_lut_oracle_leading_batch_dims(b1, b2, m, n, k, name):
+    rng = np.random.default_rng(_seed(b1, b2, m, n, k, name))
+    shape = (b1, m, k) if b2 == 1 else (b1, b2, m, k)
+    _check(_codes(rng, shape, 255), _codes(rng, (k, n), 255), name)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.integers(1, 16),
+    st.integers(1, 16),
+    st.integers(1, 64),
+    st.sampled_from(KERNEL_MULTIPLIERS),
+    st.sampled_from([31, 63, 255]),          # pruned operand bands
+    st.sampled_from([31, 255]),
+)
+def test_pallas_matches_lut_oracle_pruned_ranges(m, n, k, name, amax, wmax):
+    """Range-pruned calls (lhs_max/rhs_max drop correction features) must
+    stay exact on the restricted domain — the co-optimized band profile."""
+    rng = np.random.default_rng(_seed(m, n, k, name, amax, wmax))
+    a = _codes(rng, (m, k), amax)
+    b = _codes(rng, (k, n), wmax)
+    lut = jnp.asarray(M.mul8x8_table(name))
+    ref = np.asarray(approx_matmul_ref(a, b, lut))
+    out = np.asarray(
+        approx_matmul_pallas(a, b, multiplier=name, lhs_max=amax, rhs_max=wmax)
+    )
+    assert np.array_equal(ref, out), (name, m, n, k, amax, wmax)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(1, 300),
+    st.integers(1, 300),
+    st.integers(1, 600),
+    st.integers(0, 2**31 - 1),
+)
+def test_select_blocks_invariants(m, n, k, seed):
+    """Structural invariants of the block-shrink logic for ANY problem:
+    blocks divide the padded dims, padding never loses data, sublane/lane
+    minima hold, and blocks never exceed the requested maxima."""
+    (bm_, bn_, bk_), (mp, np_, kp) = select_blocks(m, n, k)
+    assert mp % bm_ == 0 and np_ % bn_ == 0 and kp % bk_ == 0
+    assert mp >= m and np_ >= n and kp >= k
+    assert bm_ % 8 == 0 and bn_ % 128 == 0 and bk_ % 128 == 0
+    assert bm_ <= 128 and bn_ <= 128 and bk_ <= 256
+    # padding is tight: strictly less than one block of waste
+    assert mp - m < bm_ and np_ - n < bn_ and kp - k < bk_
