@@ -1,0 +1,211 @@
+"""Paged block-table KV cache vs slot stripes at an EQUAL KV-memory budget.
+
+Both arms serve the same Poisson mixed-length trace through
+``repro.serve.scheduler.ServeSession`` with identical prompt buckets,
+decode chunking, and sampling; the only difference is how the same number
+of KV rows is organized:
+
+* **slots** — ``num_slots = budget_rows / max_len`` fixed stripes: every
+  resident request reserves the worst case, so concurrency is capped at
+  ``budget_rows / max_len`` no matter how short the requests are;
+* **paged** — the same ``budget_rows`` sliced into ``block_size``-row
+  blocks handed out by *actual* context length, with ``num_slots`` (decode
+  width) raised past the stripe bound.  Mixed traffic then packs more
+  concurrent requests into the same HBM, which is what keeps the
+  approximate-multiplier matmuls saturated (PAPER.md §IV).
+
+The JSON artifact (``BENCH_serve_paged.json``) records per-arm useful
+tokens/s, peak concurrency, latency percentiles, the concurrency ratio at
+equal memory, and the recompile count across the timed paged run (must be
+0).  Both arms must produce bit-identical greedy tokens per request — the
+cross-engine parity oracle is asserted, not sampled.
+
+    PYTHONPATH=src python benchmarks/serve_paged.py
+    PYTHONPATH=src python benchmarks/serve_paged.py --requests 48 --slot-slots 4
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import numpy as np
+
+BUCKETS = (4, 8, 16)
+# heavy-tailed budgets: short requests dominate, so worst-case stripes
+# strand most of their reservation — the regime paging is for
+NEW_CHOICES = (2, 4, 4, 8, 16, 48)
+MAX_LEN = 64
+BLOCK_SIZE = 8
+
+
+def _tiny_cfg(exec_mode: str = "exact"):
+    from repro.configs import get_config, reduced_config
+    from repro.serve.engine import resolve_execution_mode
+
+    return dataclasses.replace(
+        reduced_config(get_config("granite-3-2b")),
+        num_layers=4, d_model=256, num_heads=4, num_kv_heads=2, head_dim=64,
+        d_ff=512, vocab_size=1024, remat=False, q_chunk=64, dtype="float32",
+        approx=resolve_execution_mode(exec_mode),
+    )
+
+
+def build_trace(n: int, vocab: int, seed: int = 0, rate: float = 1.0):
+    """[(prompt, max_new, arrival_tick)] — Poisson arrival gaps, mixed
+    prompt lengths, heavy-tailed generation budgets."""
+    rng = np.random.default_rng(seed)
+    trace, t = [], 0
+    for _ in range(n):
+        t += int(rng.poisson(rate))
+        plen = int(rng.integers(2, BUCKETS[-1] + 1))
+        trace.append((
+            rng.integers(0, vocab, plen).astype(np.int32),
+            int(NEW_CHOICES[rng.integers(len(NEW_CHOICES))]),
+            t,
+        ))
+    return trace
+
+
+def run_arm(cfg, params, trace, *, layout: str, num_slots: int,
+            num_blocks=None, steps_per_tick: int = 4, policy: str = "priority"):
+    """Warm pass (compiles every program), then a timed fresh-session pass.
+    Returns (tokens_per_s, results, stats, recompiles, elapsed_s)."""
+    from repro.serve.scheduler import ServeSession, scheduler_compile_stats
+
+    def serve():
+        sess = ServeSession(
+            cfg, params, num_slots=num_slots, max_len=MAX_LEN,
+            prompt_buckets=BUCKETS, steps_per_tick=steps_per_tick,
+            cache_layout=layout, block_size=BLOCK_SIZE,
+            num_blocks=num_blocks, policy=policy,
+        )
+        for p, n, t in trace:
+            sess.submit(p, max_new=n, arrival=t)
+        sess.run()
+        return sess
+
+    warm = serve()
+    warm.warmup()                            # any program the trace missed
+    before = scheduler_compile_stats()
+    t0 = time.perf_counter()
+    sess = serve()
+    dt = time.perf_counter() - t0
+    recompiles = sum(scheduler_compile_stats().values()) - sum(before.values())
+    useful = sum(len(r.tokens) for r in sess.results.values())
+    return useful / dt, sess.results, sess.stats, recompiles, dt
+
+
+def bench(exec_mode: str = "exact", requests: int = 64, slot_slots: int = 4,
+          paged_slots: int = 12, seed: int = 0, steps_per_tick: int = 4,
+          policy: str = "priority"):
+    from repro.models.transformer import init_params
+
+    cfg = _tiny_cfg(exec_mode)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    trace = build_trace(requests, cfg.vocab_size, seed=seed)
+
+    budget_rows = slot_slots * MAX_LEN           # KV rows per layer, per arm
+    slot_tps, slot_res, slot_st, _, slot_dt = run_arm(
+        cfg, params, trace, layout="slots", num_slots=slot_slots,
+        steps_per_tick=steps_per_tick, policy=policy,
+    )
+    paged_tps, paged_res, paged_st, recompiles, paged_dt = run_arm(
+        cfg, params, trace, layout="paged", num_slots=paged_slots,
+        num_blocks=budget_rows // BLOCK_SIZE,
+        steps_per_tick=steps_per_tick, policy=policy,
+    )
+
+    # cross-engine parity oracle: same trace, bit-identical greedy tokens
+    mismatches = sum(
+        not np.array_equal(slot_res[rid].tokens, paged_res[rid].tokens)
+        for rid in slot_res
+    )
+    useful = sum(len(r.tokens) for r in slot_res.values())
+    return {
+        "bench": "serve_paged",
+        "exec_mode": exec_mode,
+        "requests": requests,
+        "seed": seed,
+        "steps_per_tick": steps_per_tick,
+        "policy": policy,
+        "prompt_buckets": list(BUCKETS),
+        "max_new_choices": list(NEW_CHOICES),
+        "max_len": MAX_LEN,
+        "block_size": BLOCK_SIZE,
+        "kv_budget_rows": budget_rows,
+        "slot_num_slots": slot_slots,
+        "paged_num_slots": paged_slots,
+        "paged_num_blocks": budget_rows // BLOCK_SIZE,
+        "useful_tokens": useful,
+        "slot_tok_s": round(slot_tps, 1),
+        "paged_tok_s": round(paged_tps, 1),
+        "speedup": round(paged_tps / slot_tps, 3),
+        "slot_peak_concurrent": slot_st.peak_active,
+        "paged_peak_concurrent": paged_st.peak_active,
+        "concurrency_ratio": round(paged_st.peak_active / slot_st.peak_active, 3),
+        "paged_peak_blocks": paged_st.peak_blocks_in_use,
+        "slot_latency_p50": slot_st.latency_p50,
+        "slot_latency_p95": slot_st.latency_p95,
+        "paged_latency_p50": paged_st.latency_p50,
+        "paged_latency_p95": paged_st.latency_p95,
+        "token_mismatches": mismatches,
+        "recompiles_after_warmup": recompiles,
+        "slot_s": round(slot_dt, 4),
+        "paged_s": round(paged_dt, 4),
+    }
+
+
+def run(exec_mode: str = "exact", requests: int = 64):
+    """benchmarks/run.py entry: (name, us_per_call, derived) rows."""
+    r = bench(exec_mode=exec_mode, requests=requests)
+    return [
+        (f"serve/paged_{exec_mode}", 1e6 / r["paged_tok_s"],
+         f"{r['paged_tok_s']} tok/s peak={r['paged_peak_concurrent']} req"),
+        (f"serve/slot_equal_mem_{exec_mode}", 1e6 / r["slot_tok_s"],
+         f"{r['slot_tok_s']} tok/s peak={r['slot_peak_concurrent']} req"),
+        (f"serve/paged_concurrency_{exec_mode}", 0.0,
+         f"{r['concurrency_ratio']}x at {r['kv_budget_rows']} KV rows, "
+         f"mismatches={r['token_mismatches']}"),
+    ]
+
+
+def main():
+    from repro.serve.scheduler import ADMISSION_POLICIES
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--exec", dest="exec_mode", default="exact",
+                    choices=("exact", "exact_quant", "approx", "approx_lowrank"))
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--slot-slots", type=int, default=4,
+                    help="slot arm width; fixes the KV budget at "
+                         "slot_slots * max_len rows")
+    ap.add_argument("--paged-slots", type=int, default=12,
+                    help="paged arm decode width (memory stays at the "
+                         "slot arm's budget)")
+    ap.add_argument("--steps", type=int, default=4,
+                    help="decode-chunk size (steps per dispatch)")
+    ap.add_argument("--policy", default="priority", choices=ADMISSION_POLICIES)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_serve_paged.json")
+    args = ap.parse_args()
+    r = bench(exec_mode=args.exec_mode, requests=args.requests,
+              slot_slots=args.slot_slots, paged_slots=args.paged_slots,
+              seed=args.seed, steps_per_tick=args.steps, policy=args.policy)
+    with open(args.out, "w") as f:
+        json.dump(r, f, indent=2)
+        f.write("\n")
+    print(json.dumps(r, indent=2))
+    if r["token_mismatches"]:
+        print(f"WARNING: {r['token_mismatches']} requests differ between arms")
+    if r["concurrency_ratio"] < 1.3 and r["speedup"] < 1.0:
+        print(f"WARNING: concurrency {r['concurrency_ratio']}x < 1.3x and "
+              f"speedup {r['speedup']}x < 1.0x at equal KV memory")
+    if r["recompiles_after_warmup"]:
+        print(f"WARNING: {r['recompiles_after_warmup']} recompiles after warmup")
+
+
+if __name__ == "__main__":
+    main()

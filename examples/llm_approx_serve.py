@@ -11,9 +11,12 @@ and throughput, plus the scan-vs-legacy-loop speedup.
     PYTHONPATH=src python examples/llm_approx_serve.py --continuous
 
 With ``--continuous`` a mixed-length request trace additionally runs through
-the slot-based continuous-batching scheduler (``repro.serve.ServeSession``)
-and each request's output is checked against running its prompt alone
-through ``generate`` — the order-independence oracle.
+the continuous-batching scheduler (``repro.serve.ServeSession``) under BOTH
+cache layouts — the slot-striped cache and the paged block-table cache (at
+half the slot layout's KV memory) — and each request's output is checked
+against running its prompt alone through ``generate``: the
+order-independence oracle, which for the paged arm also pins the block
+gather/scatter path bit-identical to the contiguous one.
 """
 import argparse
 import dataclasses
@@ -103,37 +106,49 @@ def main():
     if args.continuous:
         from repro.serve.scheduler import ServeSession
 
-        print("\n-- continuous batching (float, greedy) --")
-        sess = ServeSession(base, params, num_slots=4,
-                            max_len=max(64, 16 + args.new),
-                            prompt_buckets=(4, 8, 16))
-        sess.warmup()
+        max_len = 8 * -(-max(64, 16 + args.new) // 8)
         rng = np.random.default_rng(0)
-        oracle_args = []
+        trace = []
         for i in range(10):
             plen = int(rng.integers(2, 13))
             prompt = rng.integers(0, base.vocab_size, plen)
             max_new = int(rng.integers(min(2, args.new), args.new + 1))
-            sess.submit(prompt, max_new=max_new)
-            oracle_args.append((i, prompt, max_new))
-        t0 = time.perf_counter()
-        out = sess.run()
-        dt = time.perf_counter() - t0
-        n_gen = sum(len(r.tokens) for r in out.values())
-        st = sess.stats
-        print(f"{'continuous':12s}: {n_gen/dt:8.1f} tok/s  "
-              f"({len(out)} mixed-length requests, slot utilization "
-              f"{st.slot_utilization*100:.1f}%)")
-        exact = sum(
-            np.array_equal(
-                np.asarray(generate(base, params, prompt[None, :].astype(np.int32),
-                                    max_new=max_new)[0, len(prompt):]),
-                out[rid].tokens,
+            trace.append((i, prompt, max_new))
+        oracle = {
+            rid: np.asarray(generate(base, params, prompt[None, :].astype(np.int32),
+                                     max_new=max_new)[0, len(prompt):])
+            for rid, prompt, max_new in trace
+        }
+
+        for layout in ("slots", "paged"):
+            print(f"\n-- continuous batching, {layout} KV cache "
+                  "(float, greedy) --")
+            kw = dict(num_slots=4, max_len=max_len, prompt_buckets=(4, 8, 16))
+            if layout == "paged":
+                # half the slot layout's KV memory: blocks are handed out by
+                # actual context length, so the same trace still fits
+                kw.update(cache_layout="paged", block_size=8,
+                          num_blocks=4 * max_len // 8 // 2)
+            sess = ServeSession(base, params, **kw)
+            sess.warmup()
+            for rid, prompt, max_new in trace:
+                sess.submit(prompt, max_new=max_new, req_id=rid)
+            t0 = time.perf_counter()
+            out = sess.run()
+            dt = time.perf_counter() - t0
+            n_gen = sum(len(r.tokens) for r in out.values())
+            st = sess.stats
+            extra = (f", peak blocks {st.peak_blocks_in_use}/{sess.num_blocks}"
+                     if layout == "paged" else "")
+            print(f"{layout:12s}: {n_gen/dt:8.1f} tok/s  "
+                  f"({len(out)} mixed-length requests, slot utilization "
+                  f"{st.slot_utilization*100:.1f}%{extra})")
+            exact = sum(
+                np.array_equal(oracle[rid], out[rid].tokens)
+                for rid, _, _ in trace
             )
-            for rid, prompt, max_new in oracle_args
-        )
-        print(f"order-independence oracle: {exact}/{len(oracle_args)} requests "
-              "bit-identical to a standalone generate() run")
+            print(f"order-independence oracle: {exact}/{len(trace)} requests "
+                  "bit-identical to a standalone generate() run")
 
 
 if __name__ == "__main__":

@@ -5,12 +5,18 @@ mesh.
         --batch 4 --new 8 --exec approx_lowrank
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --reduced \
         --engine continuous --requests 16 --num-slots 4
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --reduced \
+        --engine continuous --cache-layout paged --block-size 8 \
+        --num-slots 8 --num-blocks 64 --policy sjf
 
 ``--exec`` selects the execution mode (exact / exact_quant / approx /
 approx_lowrank — see ``repro.serve.engine.resolve_execution_mode``);
 ``--engine legacy`` runs the per-token Python loop baseline for comparison;
 ``--engine continuous`` serves a mixed-length synthetic trace through the
-slot-based continuous-batching scheduler (``repro.serve.scheduler``).
+continuous-batching scheduler (``repro.serve.scheduler``) — slot-striped KV
+by default, or the paged block-table cache with ``--cache-layout paged``
+(``--num-blocks`` caps KV memory independently of ``--num-slots``;
+``--policy`` picks the admission order).
 """
 from __future__ import annotations
 
@@ -23,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced_config
+from repro.serve.scheduler import ADMISSION_POLICIES, CACHE_LAYOUTS
 from repro.serve.engine import (
     EXECUTION_MODES,
     SamplingConfig,
@@ -54,7 +61,17 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=16,
                     help="continuous engine: synthetic trace length")
     ap.add_argument("--max-len", type=int, default=128,
-                    help="continuous engine: per-slot cache capacity")
+                    help="continuous engine: per-request cache capacity")
+    ap.add_argument("--cache-layout", default="slots", choices=CACHE_LAYOUTS,
+                    help="continuous engine: per-slot max_len stripes, or a "
+                         "paged block-table KV cache")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged layout: KV rows per block")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="paged layout: global block-pool size (default "
+                         "matches the slot layout's HBM)")
+    ap.add_argument("--policy", default="priority", choices=ADMISSION_POLICIES,
+                    help="continuous engine: admission order")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -90,9 +107,13 @@ def main(argv=None):
         while buckets[-1] < args.prompt_len:
             buckets.append(buckets[-1] * 2)
         max_len = max(args.max_len, buckets[-1] + args.new)
+        if args.cache_layout == "paged" and max_len % args.block_size:
+            max_len += args.block_size - max_len % args.block_size
         sess = ServeSession(
             cfg, params, num_slots=args.num_slots, max_len=max_len,
             prompt_buckets=tuple(buckets), sampling=sampling,
+            cache_layout=args.cache_layout, block_size=args.block_size,
+            num_blocks=args.num_blocks, policy=args.policy,
         )
         sess.warmup()
         for _ in range(args.requests):
@@ -106,10 +127,17 @@ def main(argv=None):
         dt = time.perf_counter() - t0
         generated = sum(len(r.tokens) for r in results.values())
         st = sess.stats
-        print(f"[continuous/{args.exec_mode}] {len(results)} requests, "
+        print(f"[continuous/{args.exec_mode}/{args.cache_layout}] "
+              f"{len(results)} requests, "
               f"{generated} tokens in {dt:.3f}s ({generated/dt:.1f} tok/s, "
               f"post-compile), slot utilization {st.slot_utilization*100:.1f}% "
               f"over {st.ticks} ticks x {args.num_slots} slots")
+        print(f"  ttft p50/p95 = {st.ttft_p50:.0f}/{st.ttft_p95:.0f} ticks, "
+              f"latency p50/p95 = {st.latency_p50:.0f}/{st.latency_p95:.0f} "
+              f"ticks, peak concurrency {st.peak_active}")
+        if args.cache_layout == "paged":
+            print(f"  KV pool: {sess.num_blocks} x {args.block_size}-row "
+                  f"blocks, peak in use {st.peak_blocks_in_use}")
         first = results[min(results)]
         print("sample:", first.full_sequence.tolist())
         return

@@ -26,6 +26,7 @@ __all__ = [
     "attention_core",
     "self_attention",
     "decode_attention",
+    "paged_decode_attention",
     "seed_kv_cache",
 ]
 
@@ -255,3 +256,65 @@ def decode_attention(
     out = attention_core(q, k_cache, v_cache, causal=False, kv_len=cur_len + 1, q_chunk=1)
     out = L.dense(out.reshape(B, 1, n_heads * hd), p.wo, cfg)
     return out, (k_cache, v_cache)
+
+
+def paged_decode_attention(
+    x: jax.Array,                 # (B, 1, d)
+    p: AttnParams,
+    k_blocks: jax.Array,          # (num_blocks, block_size, Hkv, hd) one layer
+    v_blocks: jax.Array,
+    block_table: jax.Array,       # (B, W) int32 physical block ids
+    cur_len: jax.Array,           # (B,) current lengths (new token index)
+    *,
+    block_size: int,
+    n_heads: int,
+    n_kv: int,
+    cfg: ApproxConfig,
+    rope_theta: float = 10000.0,
+    use_rope: bool = True,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """``decode_attention`` against a paged KV cache: append K/V into the
+    request's current block, gather its blocks via the block table, attend.
+
+    Row ``b``'s logical position ``pos`` lives at offset ``pos % block_size``
+    of physical block ``block_table[b, pos // block_size]``.  The table is
+    fixed-width (``W = max_len // block_size``) with unallocated entries set
+    to the sentinel ``num_blocks``, so ONE compiled program serves any
+    context layout; table *contents* are traced data.
+
+    * the append scatter targets the sentinel for rows past their allocated
+      blocks (or past the table) — out-of-bounds scatter updates are DROPPED
+      under jit (dynamic_update_slice would CLAMP; do not swap the write
+      path), so overshoot and inactive rows write nothing;
+    * the gather ``k_blocks[block_table]`` clamps sentinel entries to the
+      last real block — bounded garbage from some other request, which the
+      ``kv_len`` mask then zeroes *exactly* (its scores sit at ~-1e30, so
+      softmax assigns probability 0.0 and the AV sum is bit-identical to
+      attending over the slot layout's in-place cache).
+
+    The gathered (B, W*block_size, Hkv, hd) view is transient; only the
+    block pool persists.  Projections route through ``layers.dense`` exactly
+    as in ``decode_attention`` — every execution mode (incl. the Pallas
+    approx-matmul kernel) is layout-agnostic."""
+    B, _, d = x.shape
+    hd = w_dim(p.wq, 1) // n_heads
+    q = L.dense(x, p.wq, cfg).reshape(B, 1, n_heads, hd)
+    k = L.dense(x, p.wk, cfg).reshape(B, 1, n_kv, hd)
+    v = L.dense(x, p.wv, cfg).reshape(B, 1, n_kv, hd)
+    if use_rope:
+        q, k = L.apply_rope(q, k, cur_len[:, None], theta=rope_theta)
+    num_blocks = k_blocks.shape[0]
+    W = block_table.shape[1]
+    blk = cur_len // block_size
+    off = cur_len % block_size
+    phys = jnp.take_along_axis(
+        block_table, jnp.minimum(blk, W - 1)[:, None], axis=1
+    )[:, 0]
+    phys = jnp.where(blk < W, phys, num_blocks)      # past-table -> dropped
+    k_blocks = k_blocks.at[phys, off].set(k[:, 0].astype(k_blocks.dtype))
+    v_blocks = v_blocks.at[phys, off].set(v[:, 0].astype(v_blocks.dtype))
+    kg = k_blocks[block_table].reshape(B, W * block_size, n_kv, hd)
+    vg = v_blocks[block_table].reshape(B, W * block_size, n_kv, hd)
+    out = attention_core(q, kg, vg, causal=False, kv_len=cur_len + 1, q_chunk=1)
+    out = L.dense(out.reshape(B, 1, n_heads * hd), p.wo, cfg)
+    return out, (k_blocks, v_blocks)

@@ -29,6 +29,7 @@ from repro.models.attention import (
     AttnParams,
     decode_attention,
     init_attn,
+    paged_decode_attention,
     seed_kv_cache,
     self_attention,
 )
@@ -38,8 +39,10 @@ __all__ = [
     "init_params",
     "forward",
     "init_cache",
+    "init_paged_cache",
     "seed_cache",
     "decode_step",
+    "paged_decode_step",
     "FFNParams",
 ]
 
@@ -348,6 +351,26 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
     }
 
 
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int, dtype=jnp.bfloat16):
+    """Paged KV cache: a global pool of ``num_blocks`` fixed-size blocks per
+    layer instead of a per-request ``max_len`` stripe.  Total HBM is
+    ``num_blocks * block_size`` KV rows per layer regardless of how many
+    requests are resident — the block table (see ``serve.scheduler``) maps
+    each request's logical positions onto its owned blocks.
+
+    Attention families only: SSM/hybrid decode state is O(1) per request
+    (conv tap + ssm state, no sequence axis), so there is nothing to page —
+    those families keep the slot layout."""
+    if cfg.family in ("ssm", "hybrid"):
+        raise NotImplementedError(
+            f"{cfg.family} caches carry per-request conv/ssm state with no "
+            "sequence axis; the paged layout applies to attention-family "
+            "KV caches only"
+        )
+    shape = (cfg.num_layers, num_blocks, block_size, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
 def seed_cache(cfg: ModelConfig, cache, kvs) -> Dict[str, jax.Array]:
     """Write fused-prefill K/V (from ``forward(..., return_kv=True)``) into a
     fresh ``init_cache`` pytree at positions [0, S0) for every layer."""
@@ -437,19 +460,66 @@ def decode_step(
             rope_theta=cfg.rope_theta,
             use_rope=cfg.pos_embedding in ("rope", "m_rope"),
         )
-        x = x + h
-        if cfg.family == "moe":
-            B = x.shape[0]
-            h2, _ = moe_ffn(
-                L.rms_norm(x, layer["ln2"]).reshape(B, cfg.d_model),
-                layer["moe"], top_k=cfg.moe_top_k, cfg=a,
-                capacity_factor=cfg.capacity_factor,
-                unroll_experts=cfg.unroll_experts,
-            )
-            x = x + h2.reshape(B, 1, cfg.d_model)
-        else:
-            x = x + _ffn(L.rms_norm(x, layer["ln2"]), layer["ffn"], a, cfg.fuse_gate_up)
-        return x, (kc, vc)
+        return _decode_mlp(cfg, x + h, layer, a), (kc, vc)
+
+    x, (k_new, v_new) = _scan_decode(
+        body, x, (params["layers"], cache["k"], cache["v"]), cfg.scan_layers
+    )
+    return _head(cfg, params, x), {"k": k_new, "v": v_new}
+
+
+def _decode_mlp(cfg: ModelConfig, x, layer, a: ApproxConfig):
+    """The post-attention half of a decode-path attention-family block."""
+    if cfg.family == "moe":
+        B = x.shape[0]
+        h2, _ = moe_ffn(
+            L.rms_norm(x, layer["ln2"]).reshape(B, cfg.d_model),
+            layer["moe"], top_k=cfg.moe_top_k, cfg=a,
+            capacity_factor=cfg.capacity_factor,
+            unroll_experts=cfg.unroll_experts,
+        )
+        return x + h2.reshape(B, 1, cfg.d_model)
+    return x + _ffn(L.rms_norm(x, layer["ln2"]), layer["ffn"], a, cfg.fuse_gate_up)
+
+
+def paged_decode_step(
+    cfg: ModelConfig,
+    params: Dict[str, Any],
+    cache: Dict[str, jax.Array],
+    batch: Dict[str, jax.Array],
+    cur_len: jax.Array,                 # (B,)
+    block_tables: jax.Array,            # (B, W) int32
+    *,
+    block_size: int,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """``decode_step`` against an ``init_paged_cache`` pytree: identical
+    math, but each row's K/V reads and the new token's write are routed
+    through its block table (``attention.paged_decode_attention``).  The
+    table is shared across layers — block ``b`` of layer ``l`` lives at
+    ``cache["k"][l, table[row, pos // block_size]]``."""
+    if cfg.family in ("ssm", "hybrid"):
+        raise NotImplementedError("paged decode applies to attention-family caches only")
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.embed_input:
+        x = params["embed"][batch["tokens"]].astype(dtype)
+    else:
+        x = batch["embeddings"].astype(dtype)
+    if cfg.pos_embedding == "sinusoidal":
+        x = x + L.sinusoidal_at(cur_len, cfg.d_model)[:, None, :].astype(dtype)
+
+    a = cfg.approx
+
+    def body(x, scanned):
+        layer, kc, vc = scanned
+        h, (kc, vc) = paged_decode_attention(
+            L.rms_norm(x, layer["ln1"]), layer["attn"], kc, vc,
+            block_tables, cur_len,
+            block_size=block_size,
+            n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads, cfg=a,
+            rope_theta=cfg.rope_theta,
+            use_rope=cfg.pos_embedding in ("rope", "m_rope"),
+        )
+        return _decode_mlp(cfg, x + h, layer, a), (kc, vc)
 
     x, (k_new, v_new) = _scan_decode(
         body, x, (params["layers"], cache["k"], cache["v"]), cfg.scan_layers

@@ -1,5 +1,6 @@
 """Serving: scan-based batched engine (PR 1) + continuous-batching
-scheduler over a slot-based KV cache (PR 2)."""
+scheduler over a slot-based (PR 2) or paged block-table (PR 3) KV cache."""
+from repro.serve.cache import BlockPool, PromptBuckets, SlotPool
 from repro.serve.engine import (
     EXECUTION_MODES,
     GenerationState,
@@ -12,6 +13,8 @@ from repro.serve.engine import (
     select_token,
 )
 from repro.serve.scheduler import (
+    ADMISSION_POLICIES,
+    CACHE_LAYOUTS,
     CompletedRequest,
     Request,
     SchedulerStats,
@@ -20,6 +23,11 @@ from repro.serve.scheduler import (
 )
 
 __all__ = [
+    "ADMISSION_POLICIES",
+    "CACHE_LAYOUTS",
+    "BlockPool",
+    "PromptBuckets",
+    "SlotPool",
     "EXECUTION_MODES",
     "GenerationState",
     "SamplingConfig",

@@ -1,9 +1,19 @@
-"""Slot-based KV cache management for continuous batching.
+"""KV-cache management for continuous batching: slot stripes and paged blocks.
 
-The pooled decode cache is the ordinary ``transformer.init_cache`` pytree
-with ``batch == num_slots``: every leaf carries the slot axis at position 1
-((L, B, ...) for dense/ssm leaves, (n_groups, B, ...) for hybrid attention
-leaves).  That uniformity is what makes slot management a handful of pure tree ops:
+Two cache layouts share this module:
+
+* **slots** (PR 2): the pooled decode cache is the ordinary
+  ``transformer.init_cache`` pytree with ``batch == num_slots`` — every
+  request reserves a worst-case ``max_len`` stripe for its whole lifetime;
+* **paged** (PR 3): K/V live in a global pool of fixed-size blocks
+  (``transformer.init_paged_cache`` leaves ``(L, num_blocks, block_size,
+  Hkv, hd)``) handed out by ``BlockPool``; each request holds only the
+  blocks its *actual* context occupies, recorded in a fixed-width
+  per-request block table (``(num_slots, max_len // block_size)`` int32,
+  unallocated entries == ``num_blocks``).  Mixed context lengths then share
+  HBM instead of each reserving the worst case.
+
+Slot-layout cache ops (pure tree ops, jit-friendly):
 
 * ``scatter_rows``  — batched admission (the scheduler's production path):
   write A request rows into their (distinct) slots in one scatter, with
@@ -20,14 +30,20 @@ leaves).  That uniformity is what makes slot management a handful of pure tree o
   one at a time), and are pinned by tests/test_scheduler.py.
 
 All three take the slot index as a *traced* scalar, so one compiled program
-serves every slot — no shape depends on which slot is being filled.
+serves every slot — no shape depends on which slot is being filled.  The
+paged layout's device ops are ``scatter_prompt_blocks`` here plus
+``models.attention.paged_decode_attention``; block ids are likewise traced
+data, so one compiled program serves any block-table contents.
 
-Host-side bookkeeping lives in ``SlotPool`` (free-list) and
-``PromptBuckets`` (fixed prompt-length buckets so prefill compiles once per
-bucket, never per request length).
+Host-side bookkeeping lives in ``SlotPool`` (decode-row free list),
+``BlockPool`` (KV-block free list — both min-heaps with O(1) membership)
+and ``PromptBuckets`` (fixed prompt-length buckets so prefill compiles once
+per bucket, never per request length).
 """
 from __future__ import annotations
 
+import bisect
+import heapq
 from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
@@ -38,10 +54,12 @@ __all__ = [
     "insert_slot",
     "insert_prefill_kv",
     "scatter_rows",
+    "scatter_prompt_blocks",
     "evict_slot",
     "slot_view",
     "PromptBuckets",
     "SlotPool",
+    "BlockPool",
 ]
 
 
@@ -122,6 +140,45 @@ def insert_prefill_kv(cache: Any, kvs: Tuple[jax.Array, jax.Array], slot: jax.Ar
 
 
 # ---------------------------------------------------------------------------
+# Paged-layout cache ops
+# ---------------------------------------------------------------------------
+
+
+def scatter_prompt_blocks(
+    cache: Any,
+    kvs: Tuple[jax.Array, jax.Array],
+    block_ids: jax.Array,
+    block_size: int,
+) -> Any:
+    """Write fused-prefill K/V stacks (each (L, A, S_bucket, Hkv, hd)) into
+    the paged cache (leaves (L, num_blocks, block_size, Hkv, hd)).
+
+    ``block_ids`` is (A, nb) int32 with ``nb == ceil(S_bucket / block_size)``:
+    row ``i``'s ``j``-th entry is the physical block receiving positions
+    ``[j*block_size, (j+1)*block_size)`` of prompt ``i``.  Entries ``>=
+    num_blocks`` (the host's sentinel for unallocated / padding rows) are
+    DROPPED by jit scatter semantics — that is how one fixed-width compiled
+    program admits any number of requests holding any number of blocks, with
+    no ``valid`` mask needed.  Bucket positions past the last allocated block
+    hold only right-pad garbage, so dropping them is exact."""
+    k, v = kvs
+    A, nb = block_ids.shape
+    L = k.shape[0]
+    pad = nb * block_size - k.shape[2]
+    if pad:
+        widths = [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)]
+        k = jnp.pad(k, widths)
+        v = jnp.pad(v, widths)
+    ids = block_ids.reshape(-1)
+
+    def write(full, part):
+        part = part.reshape(L, A * nb, block_size, *part.shape[3:])
+        return full.at[:, ids].set(part.astype(full.dtype))
+
+    return dict(cache, k=write(cache["k"], k), v=write(cache["v"], v))
+
+
+# ---------------------------------------------------------------------------
 # Host-side bookkeeping
 # ---------------------------------------------------------------------------
 
@@ -142,13 +199,14 @@ class PromptBuckets:
         return self.sizes[-1]
 
     def bucket(self, prompt_len: int) -> int:
-        """Smallest bucket >= prompt_len."""
-        for s in self.sizes:
-            if prompt_len <= s:
-                return s
-        raise ValueError(
-            f"prompt_len={prompt_len} exceeds largest bucket {self.sizes[-1]}"
-        )
+        """Smallest bucket >= prompt_len (binary search over the sorted
+        bucket list)."""
+        i = bisect.bisect_left(self.sizes, prompt_len)
+        if i == len(self.sizes):
+            raise ValueError(
+                f"prompt_len={prompt_len} exceeds largest bucket {self.sizes[-1]}"
+            )
+        return self.sizes[i]
 
     def pad(self, prompt: np.ndarray, pad_id: int = 0) -> np.ndarray:
         """(S0,) -> (1, bucket) int32, zero-padded on the right.  Pad tokens
@@ -162,30 +220,80 @@ class PromptBuckets:
         return out
 
 
-class SlotPool:
-    """Free-list over ``num_slots`` decode slots."""
+class _IdPool:
+    """Min-heap free list over ``count`` integer ids with an O(1) membership
+    set: ``acquire`` is O(log n) (was O(n) ``list.pop(0)``), ``release`` is
+    O(log n) with O(1) double-free detection (was a linear scan + sort).
+    Lowest free id first keeps allocation deterministic for tests/replay."""
 
-    def __init__(self, num_slots: int):
-        if num_slots < 1:
-            raise ValueError(f"num_slots must be >= 1, got {num_slots}")
-        self.num_slots = num_slots
-        self._free: List[int] = list(range(num_slots))
+    _what = "id"
+
+    def __init__(self, count: int):
+        if count < 1:
+            raise ValueError(f"need at least one {self._what}, got {count}")
+        self._count = count
+        self._heap: List[int] = list(range(count))   # range is already a heap
+        self._free_set = set(self._heap)
 
     @property
     def free_count(self) -> int:
-        return len(self._free)
+        return len(self._heap)
 
     @property
     def busy_count(self) -> int:
-        return self.num_slots - len(self._free)
+        return self._count - len(self._heap)
 
     def acquire(self) -> Optional[int]:
-        return self._free.pop(0) if self._free else None
+        if not self._heap:
+            return None
+        i = heapq.heappop(self._heap)
+        self._free_set.discard(i)
+        return i
 
-    def release(self, slot: int) -> None:
-        if slot in self._free:
-            raise ValueError(f"slot {slot} double-released")
-        if not 0 <= slot < self.num_slots:
-            raise ValueError(f"slot {slot} out of range")
-        self._free.append(slot)
-        self._free.sort()
+    def acquire_many(self, n: int) -> Optional[List[int]]:
+        """All-or-nothing: ``n`` ids, or None (pool untouched) if fewer free."""
+        if n > len(self._heap):
+            return None
+        return [self.acquire() for _ in range(n)]
+
+    def release(self, i: int) -> None:
+        if not 0 <= i < self._count:
+            raise ValueError(f"{self._what} {i} out of range")
+        if i in self._free_set:
+            raise ValueError(f"{self._what} {i} double-released")
+        heapq.heappush(self._heap, i)
+        self._free_set.add(i)
+
+    def release_many(self, ids: Sequence[int]) -> None:
+        for i in ids:
+            self.release(i)
+
+
+class SlotPool(_IdPool):
+    """Free list over ``num_slots`` decode slots (batch rows of the decode
+    program)."""
+
+    _what = "slot"
+
+    def __init__(self, num_slots: int):
+        super().__init__(num_slots)
+        self.num_slots = num_slots
+
+
+class BlockPool(_IdPool):
+    """Free list over ``num_blocks`` physical KV blocks — the paged layout's
+    global memory allocator.  A block is exclusively owned by one request
+    from ``acquire`` to ``release``; the host-side block table maps a
+    request's logical block slots to its physical blocks, and the sentinel id
+    ``num_blocks`` marks unallocated table entries (device writes there are
+    dropped)."""
+
+    _what = "block"
+
+    def __init__(self, num_blocks: int):
+        super().__init__(num_blocks)
+        self.num_blocks = num_blocks
+
+    @property
+    def sentinel(self) -> int:
+        return self.num_blocks

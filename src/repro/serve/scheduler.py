@@ -8,16 +8,37 @@ request queue the moment its occupant finishes (EOS or max-token), so the
 approximate-multiplier matmuls stay saturated instead of idling behind the
 longest request.
 
+Two **cache layouts** share the session (``cache_layout=``):
+
+* ``"slots"`` — every request reserves a worst-case ``max_len`` KV stripe
+  for its lifetime (the PR-2 engine, kept as the parity oracle);
+* ``"paged"`` — K/V live in a global ``BlockPool`` of fixed-size blocks
+  and each request holds only the blocks its actual context occupies,
+  recorded in a fixed-width per-slot block table.  Admission allocates
+  ``ceil(prompt_len / block_size)`` blocks, decode appends one block only
+  when a request's context crosses a block boundary, and completion frees
+  every held block immediately — so mixed-context traffic shares HBM
+  instead of stranding it, and ``num_slots`` (decode width) decouples from
+  memory.  Admission reserves each request's worst case
+  (``ceil((prompt_len + max_new - 1) / block_size)`` blocks) against the
+  pool, which makes mid-decode block appends infallible: no preemption
+  path is ever needed.  Greedy float outputs are bit-identical to the slot
+  layout (and to standalone ``generate``) — masked block-gather garbage
+  receives softmax probability exactly 0.0.
+
 Everything runs under **fixed compiled shapes**:
 
-* ONE decode program per (config, sampling, num_slots, max_len) — a single
-  ``decode_step`` over the pooled cache each tick, all slots at once;
+* ONE decode program per (config, sampling, num_slots, max_len [, layout])
+  — a single ``decode_step`` / ``paged_decode_step`` over the pooled cache
+  each tick, all slots at once; block-table *contents* are traced data, so
+  no context layout recompiles;
 * ONE prefill program per prompt-length *bucket* (``PromptBuckets``):
   every admission in a tick shares a single batched (width ``num_slots``)
   fused ``forward(return_kv=True)`` pass that seeds the freed slots' KV rows
   and samples each first token (SSM/hybrid families fall back to a masked
   teacher-forced scan inside the same jit); unadmitted rows degenerate to
-  exact no-ops (``cache.scatter_rows``), and the other slots' rows are
+  exact no-ops (``cache.scatter_rows`` where-gather for slots, dropped
+  sentinel-block scatters for paged), and the other slots' rows are
   untouched.
 
 No request pattern (arrival order, prompt length, max_new mix) triggers a
@@ -47,7 +68,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models.transformer import decode_step, forward, init_cache
+from repro.models.transformer import (
+    decode_step,
+    forward,
+    init_cache,
+    init_paged_cache,
+    paged_decode_step,
+)
 from repro.serve import cache as C
 from repro.serve.engine import SamplingConfig, select_token
 
@@ -57,7 +84,12 @@ __all__ = [
     "SchedulerStats",
     "ServeSession",
     "scheduler_compile_stats",
+    "CACHE_LAYOUTS",
+    "ADMISSION_POLICIES",
 ]
+
+CACHE_LAYOUTS = ("slots", "paged")
+ADMISSION_POLICIES = ("priority", "fifo", "sjf")
 
 
 # ---------------------------------------------------------------------------
@@ -65,7 +97,9 @@ __all__ = [
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "sampling", "steps"))
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "sampling", "steps", "block_size")
+)
 def _decode_tick_jit(
     cfg: ModelConfig,
     params,
@@ -74,27 +108,38 @@ def _decode_tick_jit(
     cur_len: jax.Array,        # (N,) int32
     active: jax.Array,         # (N,) bool
     slot_keys: jax.Array,      # (N, 2) uint32 per-request PRNG keys
+    tables: Optional[jax.Array] = None,   # (N, W) int32 — paged layout only
     *,
     sampling: SamplingConfig,
     steps: int = 1,
+    block_size: int = 0,
 ):
     """``steps`` decode steps across all slots in one dispatch (decode
     chunk).  Inactive slots compute garbage into their own rows only (masked
-    out here and overwritten at next admit).  Rows that finish mid-chunk
-    (eos here, max-token on the host) overshoot at most ``steps - 1``
-    positions; the host discards the extra tokens.  Overshoot cache writes
-    go through ``decode_attention``'s per-row ``.at[b, cur_len].set``
-    scatter, whose out-of-bounds updates are dropped (unlike
-    ``dynamic_update_slice``, which CLAMPS — do not swap the write path
-    without rechecking this); the hard guarantee, though, is ``submit``'s
-    ``prompt_len + max_new <= max_len`` bound: no attending row ever reads a
-    position an overshooting row could have written."""
+    out here and overwritten at next admit; under the paged layout their
+    all-sentinel table rows drop the writes entirely).  Rows that finish
+    mid-chunk (eos here, max-token on the host) overshoot at most
+    ``steps - 1`` positions; the host discards the extra tokens.  Overshoot
+    cache writes go through per-row ``.at[...].set`` scatters, whose
+    out-of-bounds updates are dropped (unlike ``dynamic_update_slice``,
+    which CLAMPS — do not swap the write path without rechecking this); the
+    hard guarantee, though, is ``submit``'s ``prompt_len + max_new <=
+    max_len`` bound: no attending row ever reads a position an overshooting
+    row could have written.  ``tables is None`` selects the slot layout at
+    trace time — both layouts share this entry point, so the compile-count
+    recompile checks cover them uniformly."""
 
     def one(carry, _):
         cache, last_token, cur_len, done = carry
-        logits, cache = decode_step(
-            cfg, params, cache, {"tokens": last_token[:, None]}, cur_len
-        )
+        if tables is None:
+            logits, cache = decode_step(
+                cfg, params, cache, {"tokens": last_token[:, None]}, cur_len
+            )
+        else:
+            logits, cache = paged_decode_step(
+                cfg, params, cache, {"tokens": last_token[:, None]}, cur_len,
+                tables, block_size=block_size,
+            )
         # the sampled token lands at position cur_len + 1 -> unique, slot-
         # and schedule-independent key per token
         keys = jax.vmap(jax.random.fold_in)(slot_keys, cur_len + 1)
@@ -219,6 +264,36 @@ def _admit_decode_jit(
     return cache, _first_tokens(last, req_keys, prompt_lens, sampling), req_keys
 
 
+@functools.partial(jax.jit, static_argnames=("cfg", "sampling", "block_size"))
+def _admit_fused_paged_jit(
+    cfg: ModelConfig,
+    params,
+    cache,
+    prompts: jax.Array,        # (A, S_bucket) int32, right-padded
+    prompt_lens: jax.Array,    # (A,) int32
+    block_ids: jax.Array,      # (A, ceil(S_bucket/block_size)) int32
+    req_ids: jax.Array,        # (A,) int32
+    base_key: jax.Array,       # (2,) uint32 session key
+    *,
+    sampling: SamplingConfig,
+    block_size: int,
+):
+    """Batched fused prefill-on-admit against the paged cache: ONE
+    full-sequence pass prefills every admission of this tick, scatters each
+    row's K/V into its allocated blocks, and samples each first token.
+    Unallocated / padding-row entries of ``block_ids`` hold the sentinel
+    ``num_blocks`` and are dropped by the scatter — no ``valid`` mask is
+    needed, and 1..A admissions share the program (compiled once per
+    (admit width, bucket))."""
+    logits, _, kvs = forward(cfg, params, {"tokens": prompts}, return_kv=True)
+    last = jnp.take_along_axis(
+        logits, (prompt_lens - 1)[:, None, None], axis=1
+    )[:, 0, :]
+    cache = C.scatter_prompt_blocks(cache, kvs, block_ids, block_size)
+    req_keys = _request_keys(base_key, req_ids)
+    return cache, _first_tokens(last, req_keys, prompt_lens, sampling), req_keys
+
+
 @functools.partial(jax.jit, static_argnames=())
 def _evict_jit(cache, slot: jax.Array):
     return C.evict_slot(cache, slot)
@@ -241,6 +316,7 @@ def scheduler_compile_stats() -> Dict[str, int]:
         "decode_tick": _jit_cache_size(_decode_tick_jit),
         "admit_fused": _jit_cache_size(_admit_fused_jit),
         "admit_decode": _jit_cache_size(_admit_decode_jit),
+        "admit_paged": _jit_cache_size(_admit_fused_paged_jit),
         "evict": _jit_cache_size(_evict_jit),
     }
 
@@ -287,11 +363,38 @@ class SchedulerStats:
     generated_tokens: int = 0       # across all requests (incl. admit token)
     admit_calls: int = 0            # batched prefill dispatches
     prefills: Dict[int, int] = dataclasses.field(default_factory=dict)  # bucket -> requests
+    peak_active: int = 0            # max concurrently-resident requests
+    peak_blocks_in_use: int = 0     # paged layout: max pool blocks held at once
+    # per-request latencies in scheduler ticks, appended at admit / finish
+    ttft_ticks: List[int] = dataclasses.field(default_factory=list)
+    latency_ticks: List[int] = dataclasses.field(default_factory=list)
 
     @property
     def slot_utilization(self) -> float:
         cap = self.busy_slot_steps + self.idle_slot_steps
         return self.busy_slot_steps / cap if cap else 0.0
+
+    @staticmethod
+    def _pct(xs: List[int], q: float) -> float:
+        return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+    # time-to-first-token (queue wait + prefill) and total latency, both in
+    # ticks relative to the request's arrival tick
+    @property
+    def ttft_p50(self) -> float:
+        return self._pct(self.ttft_ticks, 50)
+
+    @property
+    def ttft_p95(self) -> float:
+        return self._pct(self.ttft_ticks, 95)
+
+    @property
+    def latency_p50(self) -> float:
+        return self._pct(self.latency_ticks, 50)
+
+    @property
+    def latency_p95(self) -> float:
+        return self._pct(self.latency_ticks, 95)
 
 
 @dataclasses.dataclass
@@ -313,7 +416,19 @@ class ServeSession:
     >>> sess = ServeSession(cfg, params, num_slots=8, max_len=256)
     >>> sess.submit(prompt_ids, max_new=64)
     >>> results = sess.run()          # {req_id: CompletedRequest}
-    """
+
+    ``cache_layout="paged"`` swaps the per-slot ``max_len`` KV stripes for a
+    global ``BlockPool`` of ``num_blocks`` blocks of ``block_size`` KV rows:
+    ``num_slots`` then bounds decode *width* only, and memory admission is
+    governed by each request's worst-case block reservation.  The default
+    ``num_blocks`` matches the slot layout's HBM exactly
+    (``num_slots * max_len / block_size``); raise ``num_slots`` (or lower
+    ``num_blocks``) to oversubscribe.  ``policy`` orders the ready queue:
+    ``"priority"`` (the ``Request.priority`` classes, FIFO within a class —
+    the default, and plain FIFO when priorities are untouched), ``"fifo"``
+    (ignore priorities), or ``"sjf"`` — shortest job first on
+    ``max_new + bucketed prompt len``, which minimizes mean latency on a
+    drain tail."""
 
     def __init__(
         self,
@@ -328,13 +443,23 @@ class ServeSession:
         seed: int = 0,
         zero_on_evict: bool = False,
         steps_per_tick: int = 1,
+        cache_layout: str = "slots",
+        block_size: int = 16,
+        num_blocks: Optional[int] = None,
+        policy: str = "priority",
     ):
         if not cfg.embed_input:
             raise ValueError(f"{cfg.name}: token serving requires an embed-input arch")
+        if cache_layout not in CACHE_LAYOUTS:
+            raise ValueError(f"cache_layout {cache_layout!r} not in {CACHE_LAYOUTS}")
+        if policy not in ADMISSION_POLICIES:
+            raise ValueError(f"policy {policy!r} not in {ADMISSION_POLICIES}")
         self.cfg = cfg
         self.params = params
         self.sampling = sampling if sampling is not None else SamplingConfig()
         self.max_len = int(max_len)
+        self.layout = cache_layout
+        self.policy = policy
         self.buckets = C.PromptBuckets(prompt_buckets)
         if self.buckets.max_size > self.max_len:
             raise ValueError(
@@ -352,7 +477,44 @@ class ServeSession:
         # SSM/hybrid caches carry conv/ssm state -> masked teacher-forced admit
         self.prefill_mode = "decode" if cfg.family in ("ssm", "hybrid") else "fused"
 
-        self.cache = init_cache(cfg, num_slots, self.max_len, jnp.dtype(cache_dtype))
+        if cache_layout == "paged":
+            if cfg.family in ("ssm", "hybrid"):
+                raise ValueError(
+                    f"{cfg.family} decode state is O(1) per request (no KV "
+                    "sequence axis) — there is nothing to page; use "
+                    'cache_layout="slots"'
+                )
+            if zero_on_evict:
+                raise ValueError(
+                    "zero_on_evict applies to the slot layout only (freed "
+                    "blocks are invisible until re-seeded by their next owner)"
+                )
+            if block_size < 1:
+                raise ValueError(f"block_size must be >= 1, got {block_size}")
+            if self.max_len % block_size:
+                raise ValueError(
+                    f"max_len {self.max_len} must be a multiple of "
+                    f"block_size {block_size} (fixed-width block tables)"
+                )
+            self.block_size = int(block_size)
+            self.table_width = self.max_len // self.block_size
+            if num_blocks is None:
+                num_blocks = num_slots * self.table_width    # == slot-layout HBM
+            self.blocks = C.BlockPool(num_blocks)
+            self.num_blocks = int(num_blocks)
+            self.cache = init_paged_cache(
+                cfg, self.num_blocks, self.block_size, jnp.dtype(cache_dtype)
+            )
+            # per-slot block table (sentinel == num_blocks -> writes dropped),
+            # held physical blocks, and not-yet-held worst-case reservation
+            self._tables = np.full(
+                (num_slots, self.table_width), self.num_blocks, np.int32
+            )
+            self._held: List[List[int]] = [[] for _ in range(num_slots)]
+            self._future = np.zeros((num_slots,), np.int64)
+            self._reserved_total = 0           # future blocks across all rows
+        else:
+            self.cache = init_cache(cfg, num_slots, self.max_len, jnp.dtype(cache_dtype))
         self._last_token = np.zeros((num_slots,), np.int32)
         self._cur_len = np.zeros((num_slots,), np.int32)
         self._slot_keys = np.zeros((num_slots, 2), np.uint32)
@@ -360,7 +522,7 @@ class ServeSession:
 
         self._active: List[Optional[_ActiveSlot]] = [None] * num_slots
         self._pending: List[Request] = []       # future arrivals, sorted
-        self._ready: List[Tuple[int, int, Request]] = []  # heap (priority, seq)
+        self._ready: List[Tuple[int, int, Request]] = []  # heap (policy key, seq)
         self._seq = 0
         self._next_id = 0
         self.clock = 0
@@ -379,20 +541,39 @@ class ServeSession:
         priority: int = 0,
         arrival: int = 0,
     ) -> int:
-        """Queue one request; returns its id. ``arrival`` in ticks."""
+        """Queue one request; returns its id. ``arrival`` in ticks.
+
+        Every shape constraint is validated HERE, naming the request — a
+        request that can never be admitted must fail at submit, not deep
+        inside an admission tick."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
+        rid = self._next_id if req_id is None else req_id
         if prompt.size < 1:
-            raise ValueError("empty prompt")
+            raise ValueError(f"request {rid}: empty prompt")
         if max_new < 1:
-            raise ValueError(f"max_new must be >= 1, got {max_new}")
-        bucket = self.buckets.bucket(prompt.size)     # raises if no bucket fits
+            raise ValueError(f"request {rid}: max_new must be >= 1, got {max_new}")
+        if prompt.size > self.buckets.max_size:
+            raise ValueError(
+                f"request {rid}: prompt_len {prompt.size} exceeds the largest "
+                f"prompt bucket {self.buckets.max_size} (buckets "
+                f"{self.buckets.sizes}) — split the prompt or widen the buckets"
+            )
+        bucket = self.buckets.bucket(prompt.size)
         if max(bucket, prompt.size + max_new) > self.max_len:
             raise ValueError(
-                f"prompt_len {prompt.size} + max_new {max_new} (bucket {bucket}) "
-                f"exceeds cache max_len {self.max_len}"
+                f"request {rid}: prompt_len {prompt.size} + max_new {max_new} "
+                f"(bucket {bucket}) exceeds cache max_len {self.max_len}"
             )
+        if self.layout == "paged":
+            worst = self._worst_blocks(prompt.size, max_new)
+            if worst > self.num_blocks:
+                raise ValueError(
+                    f"request {rid}: worst-case context needs {worst} blocks "
+                    f"but the pool only has {self.num_blocks} — it could "
+                    "never be admitted"
+                )
         if req_id is None:
-            req_id = self._next_id
+            req_id = rid
         elif (
             req_id in self._completed
             or any(r.req_id == req_id for r in self._pending)
@@ -414,11 +595,30 @@ class ServeSession:
             self.submit(r.prompt, r.max_new, req_id=r.req_id,
                         priority=r.priority, arrival=r.arrival)
 
+    def _ready_key(self, req: Request) -> int:
+        """Admission-order key under the session policy (ties broken FIFO by
+        submission sequence)."""
+        if self.policy == "sjf":
+            # shortest job first: expected residency = generation budget +
+            # bucketed prefill cost
+            return req.max_new + self.buckets.bucket(req.prompt.size)
+        if self.policy == "fifo":
+            return 0
+        return req.priority
+
     def _push_ready(self, req: Request) -> None:
-        heapq.heappush(self._ready, (req.priority, self._seq, req))
+        heapq.heappush(self._ready, (self._ready_key(req), self._seq, req))
         self._seq += 1
 
     # -- admission -----------------------------------------------------------
+
+    def _worst_blocks(self, prompt_len: int, max_new: int) -> int:
+        """Blocks the request could ever hold: its last cache write lands at
+        position ``prompt_len + max_new - 2`` (token ``t`` of ``max_new`` is
+        written at ``prompt_len + t - 2``; the final sampled token is output,
+        never written), and prefill occupies ``[0, prompt_len)`` — bucket
+        right-padding past the last prompt block is dropped, never stored."""
+        return -(-(prompt_len + max_new - 1) // self.block_size)
 
     def _admit_width(self, n: int) -> int:
         """Admission rows are width-bucketed to powers of two (capped at
@@ -433,7 +633,11 @@ class ServeSession:
         """Admit up to ``num_slots`` requests with ONE prefill dispatch: all
         prompts pad to the largest needed bucket, the row count pads to the
         admit-width bucket, and padding rows are no-ops — so the compiled
-        program depends only on (admit width, prompt bucket)."""
+        program depends only on (admit width, prompt bucket).  Under the
+        paged layout each request additionally acquires its prompt's blocks
+        (``ceil(prompt_len / block_size)`` — proportional to the *actual*
+        context, not the bucket or ``max_len``), converting that much of the
+        reservation ``step`` took out when it popped the request."""
         assert 0 < len(reqs) <= self.pool.free_count
         A = self._admit_width(len(reqs))
         bucket = max(self.buckets.bucket(r.prompt.size) for r in reqs)
@@ -441,45 +645,71 @@ class ServeSession:
         prompt_lens = np.ones((A,), np.int32)
         valid = np.zeros((A,), bool)
         req_ids = np.zeros((A,), np.int32)
-        # valid rows -> their acquired slots; padding rows -> distinct other
-        # slot ids, keeping `slots` collision-free (deterministic scatter,
-        # and the no-op rows rewrite rows they gathered — see _scatter_rows)
         row_slot = [self.pool.acquire() for _ in reqs]
-        rest = [s for s in range(self.num_slots) if s not in row_slot]
-        slots = np.asarray((row_slot + rest)[:A], np.int32)
         for i, req in enumerate(reqs):
             plen = req.prompt.size
             prompts[i, :plen] = req.prompt
             prompt_lens[i] = plen
             valid[i] = True
             req_ids[i] = req.req_id
-        if self.prefill_mode == "fused":
-            self.cache, tok0s, req_keys = _admit_fused_jit(
+        if self.layout == "paged":
+            nb = -(-bucket // self.block_size)
+            block_ids = np.full((A, nb), self.num_blocks, np.int32)
+            for i, req in enumerate(reqs):
+                slot = row_slot[i]
+                ninit = -(-req.prompt.size // self.block_size)
+                got = self.blocks.acquire_many(ninit)
+                assert got is not None, "reservation admitted an unfundable request"
+                block_ids[i, :ninit] = got
+                self._held[slot] = got
+                self._tables[slot, :] = self.num_blocks
+                self._tables[slot, :ninit] = got
+                self._future[slot] = self._worst_blocks(req.prompt.size, req.max_new) - ninit
+                self._reserved_total -= ninit          # reservation -> held
+            self.cache, tok0s, req_keys = _admit_fused_paged_jit(
                 cfg=self.cfg, params=self.params, cache=self.cache,
-                prompts=prompts, prompt_lens=prompt_lens, slots=slots,
-                valid=valid, req_ids=req_ids, base_key=self._base_key,
-                sampling=self.sampling,
+                prompts=prompts, prompt_lens=prompt_lens, block_ids=block_ids,
+                req_ids=req_ids, base_key=self._base_key,
+                sampling=self.sampling, block_size=self.block_size,
+            )
+            self.stats.peak_blocks_in_use = max(
+                self.stats.peak_blocks_in_use, self.blocks.busy_count
             )
         else:
-            self.cache, tok0s, req_keys = _admit_decode_jit(
-                cfg=self.cfg, params=self.params, cache=self.cache,
-                prompts=prompts, prompt_lens=prompt_lens, slots=slots,
-                valid=valid, req_ids=req_ids, base_key=self._base_key,
-                sampling=self.sampling,
-                max_len=self.max_len, cache_dtype=self.cache_dtype,
-            )
+            # valid rows -> their acquired slots; padding rows -> distinct
+            # other slot ids, keeping `slots` collision-free (deterministic
+            # scatter, and the no-op rows rewrite rows they gathered — see
+            # _scatter_rows)
+            rest = [s for s in range(self.num_slots) if s not in row_slot]
+            slots = np.asarray((row_slot + rest)[:A], np.int32)
+            if self.prefill_mode == "fused":
+                self.cache, tok0s, req_keys = _admit_fused_jit(
+                    cfg=self.cfg, params=self.params, cache=self.cache,
+                    prompts=prompts, prompt_lens=prompt_lens, slots=slots,
+                    valid=valid, req_ids=req_ids, base_key=self._base_key,
+                    sampling=self.sampling,
+                )
+            else:
+                self.cache, tok0s, req_keys = _admit_decode_jit(
+                    cfg=self.cfg, params=self.params, cache=self.cache,
+                    prompts=prompts, prompt_lens=prompt_lens, slots=slots,
+                    valid=valid, req_ids=req_ids, base_key=self._base_key,
+                    sampling=self.sampling,
+                    max_len=self.max_len, cache_dtype=self.cache_dtype,
+                )
         tok0s = np.asarray(tok0s)
         req_keys = np.asarray(req_keys, np.uint32)
         self.stats.admit_calls += 1
         self.stats.prefills[bucket] = self.stats.prefills.get(bucket, 0) + len(reqs)
         eos = self.sampling.eos_id
         for i, req in enumerate(reqs):
-            slot, tok0 = int(slots[i]), int(tok0s[i])
+            slot, tok0 = row_slot[i], int(tok0s[i])
             self._last_token[slot] = tok0
             self._cur_len[slot] = int(prompt_lens[i])
             self._slot_keys[slot] = req_keys[i]
             self.stats.admitted += 1
             self.stats.generated_tokens += 1
+            self.stats.ttft_ticks.append(self.clock - req.arrival)
             state = _ActiveSlot(req, slot, [tok0], self.clock)
             if req.max_new == 1 or (eos >= 0 and tok0 == eos):
                 self._finish(state, "eos" if (eos >= 0 and tok0 == eos) else "length")
@@ -489,9 +719,21 @@ class ServeSession:
     def _finish(self, state: _ActiveSlot, reason: str) -> None:
         self._active[state.slot] = None
         self.pool.release(state.slot)
-        if self.zero_on_evict:
+        if self.layout == "paged":
+            # free every held block immediately and drop the unused remainder
+            # of the worst-case reservation; stale block contents are
+            # invisible (a block re-enters attention only after its next
+            # owner's prefill/decode writes overwrite the exposed positions)
+            slot = state.slot
+            self.blocks.release_many(self._held[slot])
+            self._held[slot] = []
+            self._tables[slot, :] = self.num_blocks
+            self._reserved_total -= int(self._future[slot])
+            self._future[slot] = 0
+        elif self.zero_on_evict:
             self.cache = _evict_jit(self.cache, np.int32(state.slot))
         self.stats.completed += 1
+        self.stats.latency_ticks.append(self.clock - state.req.arrival)
         self._just_finished.append(state.req.req_id)
         self._completed[state.req.req_id] = CompletedRequest(
             req_id=state.req.req_id,
@@ -501,6 +743,19 @@ class ServeSession:
             admitted_tick=state.admitted_tick,
             finished_tick=self.clock,
         )
+
+    def _ensure_blocks(self, slot: int, hi: int) -> None:
+        """Paged layout: append blocks to ``slot``'s table until it covers
+        cache position ``hi`` (a no-op when already covered — a request only
+        pays a pool op when its context actually crosses a block boundary)."""
+        held = self._held[slot]
+        while len(held) * self.block_size <= hi:
+            b = self.blocks.acquire()
+            assert b is not None, "block append failed despite reservation"
+            self._tables[slot, len(held)] = b
+            held.append(b)
+            self._future[slot] -= 1
+            self._reserved_total -= 1
 
     # -- stepping ------------------------------------------------------------
 
@@ -521,16 +776,37 @@ class ServeSession:
         self._just_finished.clear()
         return done
 
+    def _pop_admissible(self) -> List[Request]:
+        """Pop ready requests that fit the free slots and (paged) the block
+        pool.  Memory admission is reservation-based: a request is popped
+        only if its worst-case block count fits what the pool can still
+        promise (``free - reserved``), and that worst case is reserved on
+        the spot — which is exactly what makes mid-decode appends and the
+        no-preemption guarantee sound.  The queue head blocks admission when
+        it doesn't fit (no skip-ahead): policy order is preserved and a big
+        request cannot be starved by a stream of small ones."""
+        batch: List[Request] = []
+        while self._ready and len(batch) < self.pool.free_count:
+            req = self._ready[0][2]
+            if self.layout == "paged":
+                worst = self._worst_blocks(req.prompt.size, req.max_new)
+                if worst > self.blocks.free_count - self._reserved_total:
+                    break
+                self._reserved_total += worst
+            heapq.heappop(self._ready)
+            batch.append(req)
+        return batch
+
     def step(self) -> List[CompletedRequest]:
         """Admit what fits, run one decode chunk, release finished slots.
         Returns the requests completed during this call."""
         self._pull_arrivals()
         while self._ready and self.pool.free_count:
-            batch = [
-                heapq.heappop(self._ready)[2]
-                for _ in range(min(len(self._ready), self.pool.free_count))
-            ]
+            batch = self._pop_admissible()
+            if not batch:
+                break                 # head doesn't fit the block pool yet
             self._admit_many(batch)   # may free slots again (eos/max_new==1)
+        self.stats.peak_active = max(self.stats.peak_active, self.n_active)
 
         if self.n_active == 0:
             # idle: jump to the next arrival instead of burning empty ticks
@@ -542,11 +818,31 @@ class ServeSession:
 
         active = np.asarray([s is not None for s in self._active], bool)
         steps = self.steps_per_tick
+        tables = None
+        block_size = 0
+        if self.layout == "paged":
+            # grow each row's table to cover every position this chunk could
+            # write an ACCEPTED token to (overshoot past max_new targets
+            # sentinel entries and is dropped); the admission reservation
+            # guarantees these acquires can never fail
+            for slot, state in enumerate(self._active):
+                if state is None:
+                    continue
+                hi = min(
+                    int(self._cur_len[slot]) + steps - 1,
+                    state.req.prompt.size + state.req.max_new - 2,
+                )
+                self._ensure_blocks(slot, hi)
+            self.stats.peak_blocks_in_use = max(
+                self.stats.peak_blocks_in_use, self.blocks.busy_count
+            )
+            tables = self._tables.copy()
+            block_size = self.block_size
         self.cache, toks = _decode_tick_jit(
             cfg=self.cfg, params=self.params, cache=self.cache,
             last_token=self._last_token, cur_len=self._cur_len,
-            active=active, slot_keys=self._slot_keys, sampling=self.sampling,
-            steps=steps,
+            active=active, slot_keys=self._slot_keys, tables=tables,
+            sampling=self.sampling, steps=steps, block_size=block_size,
         )
         toks = np.asarray(toks)                  # (steps, N)
         self.clock += steps
@@ -606,7 +902,17 @@ class ServeSession:
                 slots = np.arange(A, dtype=np.int32)
                 valid = np.zeros((A,), bool)    # all rows no-op: state safe
                 req_ids = np.zeros((A,), np.int32)
-                if self.prefill_mode == "fused":
+                if self.layout == "paged":
+                    nb = -(-b // self.block_size)
+                    out = _admit_fused_paged_jit(
+                        cfg=self.cfg, params=self.params, cache=self.cache,
+                        prompts=prompts, prompt_lens=prompt_lens,
+                        # all-sentinel ids: every scatter dropped, state safe
+                        block_ids=np.full((A, nb), self.num_blocks, np.int32),
+                        req_ids=req_ids, base_key=self._base_key,
+                        sampling=self.sampling, block_size=self.block_size,
+                    )
+                elif self.prefill_mode == "fused":
                     out = _admit_fused_jit(
                         cfg=self.cfg, params=self.params, cache=self.cache,
                         prompts=prompts, prompt_lens=prompt_lens, slots=slots,
@@ -626,8 +932,10 @@ class ServeSession:
             cfg=self.cfg, params=self.params, cache=self.cache,
             last_token=self._last_token, cur_len=self._cur_len,
             active=np.zeros((self.num_slots,), bool),
-            slot_keys=self._slot_keys, sampling=self.sampling,
-            steps=self.steps_per_tick,
+            slot_keys=self._slot_keys,
+            tables=self._tables.copy() if self.layout == "paged" else None,
+            sampling=self.sampling, steps=self.steps_per_tick,
+            block_size=self.block_size if self.layout == "paged" else 0,
         )
         jax.block_until_ready(out)
         if self.zero_on_evict:
