@@ -1,0 +1,283 @@
+"""Async double-buffered serve loop vs the PR-3 synchronous loop.
+
+Both arms drive the SAME bursty long-prompt Poisson trace through
+``repro.serve.scheduler.ServeSession`` on the paged KV cache — identical
+model, buckets, decode chunking, slots, and sampling; the only difference
+is the host loop:
+
+* **sync** — the PR-3 baseline: dispatch one decode chunk, block on its
+  tokens, bookkeep, repeat; every admission additionally blocks on its
+  prefill before the next chunk can launch;
+* **async** — the double-buffered pipeline: chunk N+1 (and any admits,
+  whose first tokens merge into the device-resident carry) is dispatched
+  *before* the host blocks on chunk N, so queue management, admission and
+  finish bookkeeping overlap device compute.
+
+The trace is the regime the async loop exists for: a steady decode-heavy
+background stream (short prompts, long ``max_new``) punctured by clumps of
+long prompts (large buckets, short ``max_new``) that make the sync loop
+stall on prefill trains.  A third arm re-runs the async loop with
+``prefill_decode_ratio`` to report the starvation story: the
+``max_decode_gap_ticks`` gauge drops while outputs stay bit-identical.
+
+The JSON artifact (``BENCH_serve_async.json``) records per-arm useful
+tokens/s (best of ``--repeats`` fresh runs — CPU timings swing ~2x under
+contention, so run timed benches alone), the async/sync speedup, the
+cross-loop token-mismatch count (must be 0), a standalone-``generate``
+oracle over a subset of requests (must be 0 mismatches), the recompile
+count across every timed pass (must be 0), and ``SchedulerStats.DOCS``
+under ``field_docs`` so every metric key is self-describing.
+
+    PYTHONPATH=src python benchmarks/serve_async.py
+    PYTHONPATH=src python benchmarks/serve_async.py --smoke --out /tmp/b.json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import math
+import time
+
+import jax
+import numpy as np
+
+BUCKETS = (8, 16, 32)
+MAX_LEN = 96
+BLOCK_SIZE = 8
+ORACLE_REQUESTS = 6       # standalone-generate checks (one compile per shape)
+
+
+def _tiny_cfg(exec_mode: str = "exact"):
+    from repro.configs import get_config, reduced_config
+    from repro.serve.engine import resolve_execution_mode
+
+    # small enough that host scheduling is a visible fraction of a decode
+    # chunk — the regime where the loops differ; the loops' relative cost
+    # model is the same at serving scale, where the host gap per chunk is
+    # hidden the same way
+    return dataclasses.replace(
+        reduced_config(get_config("granite-3-2b")),
+        num_layers=2, d_model=128, num_heads=2, num_kv_heads=1, head_dim=64,
+        d_ff=256, vocab_size=1024, remat=False, q_chunk=64, dtype="float32",
+        approx=resolve_execution_mode(exec_mode),
+    )
+
+
+def build_trace(n: int, vocab: int, seed: int = 0):
+    """[(prompt, max_new, arrival_tick)]: a Poisson decode-heavy background
+    stream with every 8th..6th request replaced by a clump of long prompts
+    arriving together — the burst that starves decodes under a greedy
+    admission policy and stalls the sync loop on prefill trains."""
+    rng = np.random.default_rng(seed)
+    trace, t = [], 0
+    for i in range(n):
+        if i % 8 < 5:        # background: short prompt, decode-heavy
+            t += int(rng.poisson(2.0))
+            plen = int(rng.integers(2, 9))
+            max_new = int(rng.integers(24, 49))
+        else:                # burst member: long prompt, clumped arrival
+            plen = int(rng.integers(20, 33))
+            max_new = int(rng.integers(8, 17))
+        trace.append((rng.integers(0, vocab, plen).astype(np.int32), max_new, t))
+    return trace
+
+
+def _server(cfg, params, trace, *, loop: str, num_slots: int,
+            steps_per_tick: int, ratio=None):
+    from repro.serve.scheduler import ServeSession
+
+    def serve():
+        sess = ServeSession(
+            cfg, params, num_slots=num_slots, max_len=MAX_LEN,
+            prompt_buckets=BUCKETS, steps_per_tick=steps_per_tick,
+            cache_layout="paged", block_size=BLOCK_SIZE, loop=loop,
+            prefill_decode_ratio=ratio,
+        )
+        for p, n, t in trace:
+            sess.submit(p, max_new=n, arrival=t)
+        sess.run()
+        return sess
+
+    return serve
+
+
+def run_arms(cfg, params, trace, arms, *, repeats: int = 3):
+    """Warm every arm (compiles every program via warmup()), then run
+    ``repeats`` timed fresh-session passes per arm INTERLEAVED round-robin —
+    a CPU contention episode then taxes every arm instead of whichever one
+    happened to be on the clock — and keep each arm's best pass.  Returns
+    ({name: (tok/s, results, stats, best_s)}, recompiles across every timed
+    pass)."""
+    from repro.serve.scheduler import scheduler_compile_stats
+
+    servers = {name: _server(cfg, params, trace, **kw) for name, kw in arms}
+    for serve in servers.values():
+        serve().warmup()                     # any program the trace missed
+    before = scheduler_compile_stats()
+    best = {}
+    for _ in range(max(1, repeats)):
+        for name, serve in servers.items():
+            t0 = time.perf_counter()
+            sess = serve()
+            dt = time.perf_counter() - t0
+            if name not in best or dt < best[name][1]:
+                best[name] = (sess, dt)
+    recompiles = sum(scheduler_compile_stats().values()) - sum(before.values())
+    out = {}
+    for name, (sess, dt) in best.items():
+        useful = sum(len(r.tokens) for r in sess.results.values())
+        out[name] = (useful / dt, sess.results, sess.stats, dt)
+    return out, recompiles
+
+
+def bench(exec_mode: str = "exact", requests: int = 48, seed: int = 0,
+          num_slots: int = 8, steps_per_tick: int = 1, repeats: int = 3,
+          ratio: float = 1.0, oracle: int = ORACLE_REQUESTS):
+    from repro.models.transformer import init_params
+    from repro.serve.engine import generate
+    from repro.serve.scheduler import SchedulerStats
+
+    cfg = _tiny_cfg(exec_mode)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    trace = build_trace(requests, cfg.vocab_size, seed=seed)
+    shape = dict(num_slots=num_slots, steps_per_tick=steps_per_tick)
+
+    out, recompiles = run_arms(
+        cfg, params, trace,
+        [("sync", dict(loop="sync", **shape)),
+         ("async", dict(loop="async", **shape)),
+         ("ratio", dict(loop="async", ratio=ratio, **shape))],
+        repeats=repeats,
+    )
+    sync_tps, sync_res, sync_st, sync_dt = out["sync"]
+    async_tps, async_res, async_st, async_dt = out["async"]
+    ratio_tps, ratio_res, ratio_st, _ = out["ratio"]
+
+    # cross-loop parity: the pipeline may only move WHEN the host learns
+    # about tokens, never the tokens themselves
+    mismatches = sum(
+        not np.array_equal(sync_res[rid].tokens, async_res[rid].tokens)
+        for rid in sync_res
+    )
+    policy_mismatches = sum(
+        not np.array_equal(async_res[rid].tokens, ratio_res[rid].tokens)
+        for rid in async_res
+    )
+    # standalone-generate oracle over a subset (one compile per shape)
+    oracle_mismatches = 0
+    oracle_ids = sorted(async_res)[:oracle]
+    for rid in oracle_ids:
+        p, n, _ = trace[rid]
+        alone = np.asarray(
+            generate(cfg, params, p[None, :], max_new=n)
+        )[0, len(p):]
+        oracle_mismatches += not np.array_equal(alone, async_res[rid].tokens)
+
+    useful = sum(len(r.tokens) for r in sync_res.values())
+    return {
+        "bench": "serve_async",
+        "exec_mode": exec_mode,
+        "requests": requests,
+        "seed": seed,
+        "num_slots": num_slots,
+        "steps_per_tick": steps_per_tick,
+        "repeats_best_of": repeats,
+        "prompt_buckets": list(BUCKETS),
+        "max_len": MAX_LEN,
+        "block_size": BLOCK_SIZE,
+        "cache_layout": "paged",
+        "useful_tokens": useful,
+        "sync_tok_s": round(sync_tps, 1),
+        "async_tok_s": round(async_tps, 1),
+        "speedup": round(async_tps / sync_tps, 3),
+        "sync_overlap_fraction": round(sync_st.overlap_fraction, 3),
+        "async_overlap_fraction": round(async_st.overlap_fraction, 3),
+        "sync_ticks": sync_st.ticks,
+        "async_ticks": async_st.ticks,
+        "token_mismatches": mismatches,
+        "oracle_requests": len(oracle_ids),
+        "oracle_mismatches": oracle_mismatches,
+        "recompiles_after_warmup": recompiles,
+        "sync_s": round(sync_dt, 4),
+        "async_s": round(async_dt, 4),
+        # interleaving-policy arm: same trace, rate-limited admission
+        "prefill_decode_ratio": ratio,
+        "ratio_tok_s": round(ratio_tps, 1),
+        "free_max_decode_gap_ticks": async_st.max_decode_gap_ticks,
+        "ratio_max_decode_gap_ticks": ratio_st.max_decode_gap_ticks,
+        "ratio_gap_bound": steps_per_tick + math.ceil(ratio * steps_per_tick),
+        "ratio_prefill_stall_ticks": ratio_st.prefill_stall_ticks,
+        "policy_token_mismatches": policy_mismatches,
+        "field_docs": dict(SchedulerStats.DOCS),
+    }
+
+
+def run(exec_mode: str = "exact", requests: int = 48):
+    """benchmarks/run.py entry: (name, us_per_call, derived) rows."""
+    r = bench(exec_mode=exec_mode, requests=requests)
+    return [
+        (f"serve/async_{exec_mode}", 1e6 / r["async_tok_s"],
+         f"{r['async_tok_s']} tok/s overlap={r['async_overlap_fraction']}"),
+        (f"serve/sync_baseline_{exec_mode}", 1e6 / r["sync_tok_s"],
+         f"{r['sync_tok_s']} tok/s overlap={r['sync_overlap_fraction']}"),
+        (f"serve/async_speedup_{exec_mode}", 0.0,
+         f"{r['speedup']}x, mismatches={r['token_mismatches']}, "
+         f"gap {r['free_max_decode_gap_ticks']}->{r['ratio_max_decode_gap_ticks']} ticks"),
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--exec", dest="exec_mode", default="exact",
+                    choices=("exact", "exact_quant", "approx", "approx_lowrank"))
+    ap.add_argument("--requests", type=int, default=48)
+    ap.add_argument("--num-slots", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=1,
+                    help="decode-chunk size (steps per dispatch; 1 is where "
+                         "per-dispatch host overhead bites hardest — the "
+                         "regime the async loop hides)")
+    ap.add_argument("--repeats", type=int, default=5,
+                    help="timed passes per arm; best-of wins (contention guard)")
+    ap.add_argument("--ratio", type=float, default=1.0,
+                    help="prefill_decode_ratio for the interleaving arm")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: small trace, single repeat — checks "
+                         "machinery (parity/recompiles), not the speedup bar")
+    ap.add_argument("--out", default="BENCH_serve_async.json")
+    args = ap.parse_args()
+    kw = dict(exec_mode=args.exec_mode, requests=args.requests,
+              seed=args.seed, num_slots=args.num_slots,
+              steps_per_tick=args.steps, repeats=args.repeats,
+              ratio=args.ratio)
+    if args.smoke:
+        kw.update(requests=16, repeats=1, oracle=3)
+    r = bench(**kw)
+    with open(args.out, "w") as f:
+        json.dump(r, f, indent=2)
+        f.write("\n")
+    print(json.dumps({k: v for k, v in r.items() if k != "field_docs"}, indent=2))
+    failures = []
+    if r["token_mismatches"] or r["policy_token_mismatches"]:
+        failures.append(f"{r['token_mismatches']} sync/async + "
+                        f"{r['policy_token_mismatches']} policy token mismatches")
+    if r["oracle_mismatches"]:
+        failures.append(f"{r['oracle_mismatches']} standalone-generate mismatches")
+    if r["recompiles_after_warmup"]:
+        failures.append(f"{r['recompiles_after_warmup']} recompiles after warmup")
+    if r["ratio_max_decode_gap_ticks"] > r["ratio_gap_bound"]:
+        failures.append(
+            f"starvation gauge {r['ratio_max_decode_gap_ticks']} exceeds the "
+            f"policy bound {r['ratio_gap_bound']}")
+    for msg in failures:
+        print(f"FAIL: {msg}")
+    if not args.smoke and r["speedup"] < 1.15:
+        print(f"WARNING: async speedup {r['speedup']}x < 1.15x target "
+              "(contended machine? run solo)")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -16,7 +16,10 @@ cache layouts — the slot-striped cache and the paged block-table cache (at
 half the slot layout's KV memory) — and each request's output is checked
 against running its prompt alone through ``generate``: the
 order-independence oracle, which for the paged arm also pins the block
-gather/scatter path bit-identical to the contiguous one.
+gather/scatter path bit-identical to the contiguous one.  The paged arm
+runs twice, once per host loop (the PR-3 synchronous tick loop and the
+async double-buffered pipeline), so the oracle also pins the async loop's
+bit-exactness; see docs/serving.md for the full serve-stack architecture.
 """
 import argparse
 import dataclasses
@@ -120,10 +123,12 @@ def main():
             for rid, prompt, max_new in trace
         }
 
-        for layout in ("slots", "paged"):
-            print(f"\n-- continuous batching, {layout} KV cache "
+        for layout, loop in (("slots", "async"), ("paged", "sync"),
+                             ("paged", "async")):
+            print(f"\n-- continuous batching, {layout} KV cache, {loop} loop "
                   "(float, greedy) --")
-            kw = dict(num_slots=4, max_len=max_len, prompt_buckets=(4, 8, 16))
+            kw = dict(num_slots=4, max_len=max_len, prompt_buckets=(4, 8, 16),
+                      loop=loop)
             if layout == "paged":
                 # half the slot layout's KV memory: blocks are handed out by
                 # actual context length, so the same trace still fits
@@ -140,9 +145,11 @@ def main():
             st = sess.stats
             extra = (f", peak blocks {st.peak_blocks_in_use}/{sess.num_blocks}"
                      if layout == "paged" else "")
-            print(f"{layout:12s}: {n_gen/dt:8.1f} tok/s  "
+            label = f"{layout}/{loop}"
+            print(f"{label:12s}: {n_gen/dt:8.1f} tok/s  "
                   f"({len(out)} mixed-length requests, slot utilization "
-                  f"{st.slot_utilization*100:.1f}%{extra})")
+                  f"{st.slot_utilization*100:.1f}%, overlap "
+                  f"{st.overlap_fraction*100:.0f}%{extra})")
             exact = sum(
                 np.array_equal(oracle[rid], out[rid].tokens)
                 for rid, _, _ in trace

@@ -1,0 +1,95 @@
+"""Check that markdown links and anchors in the repo docs resolve.
+
+Stdlib-only so the CI docs job needs no installs:
+
+    python scripts/check_docs.py            # README.md + docs/*.md
+    python scripts/check_docs.py docs/serving.md README.md
+
+For every ``[text](target)`` link in the checked files:
+
+* ``http(s)://`` / ``mailto:`` targets are skipped (no network in CI);
+* relative file targets must exist on disk (resolved from the linking
+  file's directory);
+* ``#anchor`` fragments — same-file or ``path#anchor`` — must match a
+  heading in the target file under GitHub's slugification (lowercase,
+  punctuation stripped, spaces to hyphens).
+
+Exit code 0 when every link resolves, 1 with one line per broken link.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DEFAULT_FILES = ["README.md", *sorted(str(p.relative_to(ROOT)) for p in (ROOT / "docs").glob("*.md"))]
+
+# [text](target) — ignores images' leading "!" on purpose (same resolution
+# rules) and fenced code blocks (stripped before matching)
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*?)\s*#*\s*$", re.M)
+_FENCE = re.compile(r"```.*?```", re.S)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's markdown heading -> anchor id (ASCII-ish subset: lowercase,
+    drop everything but word chars/spaces/hyphens, spaces become hyphens)."""
+    s = re.sub(r"`([^`]*)`", r"\1", heading.strip().lower())
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def anchors_of(path: pathlib.Path) -> set:
+    text = _FENCE.sub("", path.read_text())
+    seen: dict = {}
+    out = set()
+    for m in _HEADING.finditer(text):
+        slug = github_slug(m.group(1))
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        out.add(slug if n == 0 else f"{slug}-{n}")   # GitHub dedup rule
+    return out
+
+
+def check_file(relpath: str) -> list:
+    """Broken-link messages for one markdown file."""
+    path = ROOT / relpath
+    errors = []
+    if not path.is_file():
+        return [f"{relpath}: file not found"]
+    text = _FENCE.sub("", path.read_text())
+    for m in _LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        file_part, _, anchor = target.partition("#")
+        dest = path if not file_part else (path.parent / file_part).resolve()
+        if not dest.exists():
+            errors.append(f"{relpath}: broken link target {target!r}")
+            continue
+        if anchor:
+            if dest.suffix != ".md":
+                errors.append(
+                    f"{relpath}: anchor on non-markdown target {target!r}")
+            elif anchor not in anchors_of(dest):
+                errors.append(
+                    f"{relpath}: anchor #{anchor} not found in "
+                    f"{dest.relative_to(ROOT)}")
+    return errors
+
+
+def main(argv=None) -> int:
+    files = (argv if argv else sys.argv[1:]) or DEFAULT_FILES
+    errors = []
+    for f in files:
+        errors.extend(check_file(f))
+    for e in errors:
+        print(f"FAIL: {e}")
+    if not errors:
+        print(f"docs check OK: {len(files)} file(s), all links/anchors resolve")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

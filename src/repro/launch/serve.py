@@ -16,7 +16,11 @@ approx_lowrank — see ``repro.serve.engine.resolve_execution_mode``);
 continuous-batching scheduler (``repro.serve.scheduler``) — slot-striped KV
 by default, or the paged block-table cache with ``--cache-layout paged``
 (``--num-blocks`` caps KV memory independently of ``--num-slots``;
-``--policy`` picks the admission order).
+``--policy`` picks the admission order).  ``--loop`` selects the host loop
+(async double-buffered pipeline by default; ``sync`` is the PR-3 baseline),
+and ``--prefill-decode-ratio`` / ``--prefill-token-budget`` rate-limit
+admitted prefill tokens against resident decode work so long-prompt bursts
+cannot starve active decodes (see docs/serving.md).
 """
 from __future__ import annotations
 
@@ -29,7 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced_config
-from repro.serve.scheduler import ADMISSION_POLICIES, CACHE_LAYOUTS
+from repro.serve.scheduler import ADMISSION_POLICIES, CACHE_LAYOUTS, SERVE_LOOPS
 from repro.serve.engine import (
     EXECUTION_MODES,
     SamplingConfig,
@@ -72,6 +76,15 @@ def main(argv=None):
                          "matches the slot layout's HBM)")
     ap.add_argument("--policy", default="priority", choices=ADMISSION_POLICIES,
                     help="continuous engine: admission order")
+    ap.add_argument("--loop", default="async", choices=SERVE_LOOPS,
+                    help="continuous engine: async double-buffered pipeline "
+                         "(default) or the strictly-alternating sync loop")
+    ap.add_argument("--prefill-decode-ratio", type=float, default=None,
+                    help="continuous engine: admit at most RATIO * resident "
+                         "decode tokens of bucketed prefill per step")
+    ap.add_argument("--prefill-token-budget", type=int, default=None,
+                    help="continuous engine: flat per-step prefill token "
+                         "budget (alternative to --prefill-decode-ratio)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -113,7 +126,9 @@ def main(argv=None):
             cfg, params, num_slots=args.num_slots, max_len=max_len,
             prompt_buckets=tuple(buckets), sampling=sampling,
             cache_layout=args.cache_layout, block_size=args.block_size,
-            num_blocks=args.num_blocks, policy=args.policy,
+            num_blocks=args.num_blocks, policy=args.policy, loop=args.loop,
+            prefill_decode_ratio=args.prefill_decode_ratio,
+            prefill_token_budget=args.prefill_token_budget,
         )
         sess.warmup()
         for _ in range(args.requests):
@@ -127,7 +142,7 @@ def main(argv=None):
         dt = time.perf_counter() - t0
         generated = sum(len(r.tokens) for r in results.values())
         st = sess.stats
-        print(f"[continuous/{args.exec_mode}/{args.cache_layout}] "
+        print(f"[continuous/{args.exec_mode}/{args.cache_layout}/{args.loop}] "
               f"{len(results)} requests, "
               f"{generated} tokens in {dt:.3f}s ({generated/dt:.1f} tok/s, "
               f"post-compile), slot utilization {st.slot_utilization*100:.1f}% "
@@ -135,6 +150,9 @@ def main(argv=None):
         print(f"  ttft p50/p95 = {st.ttft_p50:.0f}/{st.ttft_p95:.0f} ticks, "
               f"latency p50/p95 = {st.latency_p50:.0f}/{st.latency_p95:.0f} "
               f"ticks, peak concurrency {st.peak_active}")
+        print(f"  host/device overlap {st.overlap_fraction*100:.0f}% of wall, "
+              f"decode-gap gauge {st.max_decode_gap_ticks} work ticks, "
+              f"prefill stalls {st.prefill_stall_ticks}")
         if args.cache_layout == "paged":
             print(f"  KV pool: {sess.num_blocks} x {args.block_size}-row "
                   f"blocks, peak in use {st.peak_blocks_in_use}")

@@ -15,6 +15,7 @@ from repro.serve.engine import (
 from repro.serve.scheduler import (
     ADMISSION_POLICIES,
     CACHE_LAYOUTS,
+    SERVE_LOOPS,
     CompletedRequest,
     Request,
     SchedulerStats,
@@ -25,6 +26,7 @@ from repro.serve.scheduler import (
 __all__ = [
     "ADMISSION_POLICIES",
     "CACHE_LAYOUTS",
+    "SERVE_LOOPS",
     "BlockPool",
     "PromptBuckets",
     "SlotPool",

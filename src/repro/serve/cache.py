@@ -35,6 +35,12 @@ paged layout's device ops are ``scatter_prompt_blocks`` here plus
 ``models.attention.paged_decode_attention``; block ids are likewise traced
 data, so one compiled program serves any block-table contents.
 
+``merge_admit_carry`` is the async host loop's primitive: it scatters an
+admission batch's first sampled tokens and PRNG keys into the
+device-resident decode carry, letting the scheduler compose admit-program
+futures into the next chunk's inputs without a host sync (see
+``scheduler.ServeSession`` and docs/serving.md).
+
 Host-side bookkeeping lives in ``SlotPool`` (decode-row free list),
 ``BlockPool`` (KV-block free list — both min-heaps with O(1) membership)
 and ``PromptBuckets`` (fixed prompt-length buckets so prefill compiles once
@@ -55,6 +61,7 @@ __all__ = [
     "insert_prefill_kv",
     "scatter_rows",
     "scatter_prompt_blocks",
+    "merge_admit_carry",
     "evict_slot",
     "slot_view",
     "PromptBuckets",
@@ -123,6 +130,34 @@ def scatter_rows(
     cur = full[:, slots, :s_cap]
     part = jnp.where(vb, part.astype(full.dtype), cur)
     return full.at[:, slots, :s_cap].set(part)
+
+
+def merge_admit_carry(
+    last_token: jax.Array,
+    slot_keys: jax.Array,
+    slots: jax.Array,
+    tok0s: jax.Array,
+    keys: jax.Array,
+    valid: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """Scatter an admission batch's first sampled tokens ``tok0s`` (A,) and
+    per-request PRNG keys ``keys`` (A, 2) into the device-resident decode
+    carry ``last_token`` (N,) / ``slot_keys`` (N, 2) at rows ``slots``.
+
+    The async serve loop keeps the decode carry on device between chunks;
+    this merge lets freshly admitted rows join the next chunk without the
+    host ever fetching the admit program's outputs.  ``slots`` must hold
+    distinct ids (the scheduler passes acquired slots padded with distinct
+    unused ids); rows with ``valid == False`` rewrite the values they
+    gathered — an exact no-op — so one fixed-width compiled program merges
+    any number <= A of admissions."""
+    lt = last_token.at[slots].set(
+        jnp.where(valid, tok0s.astype(last_token.dtype), last_token[slots])
+    )
+    sk = slot_keys.at[slots].set(
+        jnp.where(valid[:, None], keys.astype(slot_keys.dtype), slot_keys[slots])
+    )
+    return lt, sk
 
 
 def insert_prefill_kv(cache: Any, kvs: Tuple[jax.Array, jax.Array], slot: jax.Array) -> Any:

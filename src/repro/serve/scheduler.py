@@ -45,6 +45,51 @@ No request pattern (arrival order, prompt length, max_new mix) triggers a
 recompile after ``warmup()`` — asserted by ``compile_stats`` deltas in
 tests/test_scheduler.py.
 
+Two **host loops** drive those programs (``loop=``):
+
+* ``"sync"`` — the PR-3 tick loop, kept as the parity baseline: each
+  ``step()`` admits, dispatches one decode chunk, and immediately blocks on
+  the chunk's tokens before doing any bookkeeping, so host scheduling and
+  device compute strictly alternate;
+* ``"async"`` (default) — a **double-buffered pipeline**: ``step()``
+  dispatches decode chunk *N+1* (and any admits) *before* blocking on chunk
+  *N*'s token transfer.  The decode carry (``last_token`` and the per-slot
+  PRNG keys) stays device-resident between chunks and admissions merge
+  their first sampled tokens into it with a fixed-shape scatter
+  (``cache.merge_admit_carry``), so no host sync sits between dispatches —
+  queue management, admission decisions, and ``_finish`` bookkeeping all
+  overlap device compute.  The price is one chunk of lag on *observing*
+  completions: a request that finishes inside the in-flight chunk decodes
+  one extra garbage chunk before the host sees it (discarded, counted as
+  idle — the same overshoot discipline as ``steps_per_tick``).  Length
+  completions never pay that lag: **predictive early turnover** releases a
+  row whose in-flight chunk provably finishes it by length (an eos can
+  only finish it sooner), so a successor admits into the slot before the
+  harvest and the async schedule matches the sync loop tick-for-tick.
+  Greedy float outputs remain bit-identical to the sync loop and to
+  standalone ``generate``: each row's math depends only on its own
+  carry/cache state, which both loops feed identically.  On accelerators
+  every cache-consuming program additionally donates its cache operand
+  (each cache future is consumed exactly once by the next dispatch), so
+  the pipeline rebuilds the pooled cache in place instead of doubling HBM
+  traffic; on CPU donation is deliberately off — see
+  ``_resolve_cache_donation``.
+
+**Prefill/decode interleaving** rate-limits admission so a burst of long
+prompts cannot starve resident decodes: with ``prefill_decode_ratio=R``,
+each ``step()`` admits at most ``R * n_active * steps_per_tick`` bucketed
+prompt tokens (``prefill_token_budget=B`` is the flat-budget variant); the
+queue head is deferred — never skipped — when it exceeds the remaining
+budget, and admission is unthrottled while no decode is resident (nothing
+to starve, and the queue must drain).  ``SchedulerStats`` surfaces the
+policy: ``prefill_stall_ticks`` counts steps that deferred an admissible
+request, ``max_decode_gap_ticks`` is the starvation gauge (worst
+device-work gap between a resident request's consecutive accepted tokens,
+bounded by ``steps_per_tick + ceil(R * steps_per_tick)`` under the ratio
+policy — the carry-based work accounting makes that bound exact), and
+``overlap_fraction`` reports how much of the wall clock the async loop hid
+host work behind device compute.
+
 Sampling is per-request deterministic: each request gets
 ``fold_in(session_key, req_id)`` and each sampled token position folds in
 its cache position, so a request's output is independent of which slot it
@@ -59,9 +104,10 @@ Execution modes: the session serves whatever ``cfg.approx`` selects —
 from __future__ import annotations
 
 import dataclasses
-import functools
 import heapq
-from typing import Dict, List, Optional, Sequence, Tuple
+import os
+import time
+from typing import Any, ClassVar, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -86,21 +132,68 @@ __all__ = [
     "scheduler_compile_stats",
     "CACHE_LAYOUTS",
     "ADMISSION_POLICIES",
+    "SERVE_LOOPS",
 ]
 
 CACHE_LAYOUTS = ("slots", "paged")
 ADMISSION_POLICIES = ("priority", "fifo", "sjf")
+SERVE_LOOPS = ("async", "sync")
+
+def _resolve_cache_donation() -> Tuple[str, ...]:
+    """Donate the cache operand of every cache-consuming program so the
+    pooled KV is rebuilt IN PLACE instead of copied per dispatch — sound
+    because the loop hands each cache future to exactly one next dispatch,
+    and warmup() chains its outputs the same way.  Default ON for
+    accelerators (the ROADMAP cache-donation item: cuts HBM traffic and
+    halves peak pool memory) but OFF on CPU: XLA CPU honors aliasing
+    (measured ~40x on a pool-sized ``.at[].set``), yet donating there makes
+    the chunk execute effectively inline with its dispatch, which
+    serializes the very host/device overlap the async loop exists to
+    create (measured: both loops' overlap_fraction -> ~0.99 and the async
+    win -> ~1.0x with CPU donation on; the pool copy it avoids is
+    negligible at bench scale).  ``REPRO_SERVE_DONATE=0|1`` overrides the
+    per-backend default.  Resolved lazily (first program call, via
+    ``_LazyJit``) so importing this module never initializes the jax
+    backend and the decision reads the platform the application actually
+    configured."""
+    env = os.environ.get("REPRO_SERVE_DONATE", "")
+    if env == "1":
+        return ("cache",)
+    if env == "0":
+        return ()
+    return ("cache",) if jax.default_backend() != "cpu" else ()
+
+
+class _LazyJit:
+    """Defer ``jax.jit`` wrapping to the first call.  Keeps module import
+    free of backend initialization and lets the donation decision see the
+    configured platform; exposes ``_cache_size`` like a real jit so the
+    compile-count plumbing is unchanged (0 before the first call — no
+    programs exist yet)."""
+
+    def __init__(self, build):
+        self._build = build
+        self._fn = None
+
+    def __call__(self, *args, **kwargs):
+        if self._fn is None:
+            self._fn = self._build()
+        return self._fn(*args, **kwargs)
+
+    def _cache_size(self) -> int:
+        if self._fn is None:
+            return 0
+        get = getattr(self._fn, "_cache_size", None)
+        return int(get()) if callable(get) else -1
 
 
 # ---------------------------------------------------------------------------
-# Compiled programs (module-level jits: cfg/sampling static, shared cache)
+# Compiled programs (module-level lazy jits: cfg/sampling static, shared
+# cache, cache operand donated per _resolve_cache_donation)
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(
-    jax.jit, static_argnames=("cfg", "sampling", "steps", "block_size")
-)
-def _decode_tick_jit(
+def _decode_tick(
     cfg: ModelConfig,
     params,
     cache,
@@ -127,7 +220,13 @@ def _decode_tick_jit(
     max_len`` bound: no attending row ever reads a position an overshooting
     row could have written.  ``tables is None`` selects the slot layout at
     trace time — both layouts share this entry point, so the compile-count
-    recompile checks cover them uniformly."""
+    recompile checks cover them uniformly.
+
+    Returns ``(cache, toks, last_token)``: the final ``last_token`` carry is
+    a device array the async loop feeds straight into the next chunk's
+    dispatch, which is what lets chunk N+1 launch before chunk N's tokens
+    ever reach the host (the sync loop ignores it and rebuilds the value
+    from the fetched tokens — same numbers, same program)."""
 
     def one(carry, _):
         cache, last_token, cur_len, done = carry
@@ -154,8 +253,14 @@ def _decode_tick_jit(
         return (cache, last_token, cur_len + active, done), toks
 
     carry = (cache, last_token, cur_len, jnp.zeros_like(active))
-    (cache, _, _, _), toks = jax.lax.scan(one, carry, None, length=steps)
-    return cache, toks                      # toks: (steps, N)
+    (cache, last_token, _, _), toks = jax.lax.scan(one, carry, None, length=steps)
+    return cache, toks, last_token          # toks: (steps, N)
+
+
+_decode_tick_jit = _LazyJit(lambda: jax.jit(
+    _decode_tick, static_argnames=("cfg", "sampling", "steps", "block_size"),
+    donate_argnames=_resolve_cache_donation(),
+))
 
 
 def _request_keys(base_key, req_ids):
@@ -176,8 +281,7 @@ def _first_tokens(last_logits, req_keys, prompt_lens, sampling: SamplingConfig):
 _scatter_rows = C.scatter_rows
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "sampling"))
-def _admit_fused_jit(
+def _admit_fused(
     cfg: ModelConfig,
     params,
     cache,
@@ -210,10 +314,13 @@ def _admit_fused_jit(
     return cache, _first_tokens(last, req_keys, prompt_lens, sampling), req_keys
 
 
-@functools.partial(
-    jax.jit, static_argnames=("cfg", "sampling", "max_len", "cache_dtype")
-)
-def _admit_decode_jit(
+_admit_fused_jit = _LazyJit(lambda: jax.jit(
+    _admit_fused, static_argnames=("cfg", "sampling"),
+    donate_argnames=_resolve_cache_donation(),
+))
+
+
+def _admit_decode(
     cfg: ModelConfig,
     params,
     cache,
@@ -264,8 +371,14 @@ def _admit_decode_jit(
     return cache, _first_tokens(last, req_keys, prompt_lens, sampling), req_keys
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "sampling", "block_size"))
-def _admit_fused_paged_jit(
+_admit_decode_jit = _LazyJit(lambda: jax.jit(
+    _admit_decode,
+    static_argnames=("cfg", "sampling", "max_len", "cache_dtype"),
+    donate_argnames=_resolve_cache_donation(),
+))
+
+
+def _admit_fused_paged(
     cfg: ModelConfig,
     params,
     cache,
@@ -294,9 +407,38 @@ def _admit_fused_paged_jit(
     return cache, _first_tokens(last, req_keys, prompt_lens, sampling), req_keys
 
 
-@functools.partial(jax.jit, static_argnames=())
-def _evict_jit(cache, slot: jax.Array):
+_admit_fused_paged_jit = _LazyJit(lambda: jax.jit(
+    _admit_fused_paged, static_argnames=("cfg", "sampling", "block_size"),
+    donate_argnames=_resolve_cache_donation(),
+))
+
+
+def _evict(cache, slot: jax.Array):
     return C.evict_slot(cache, slot)
+
+
+_evict_jit = _LazyJit(lambda: jax.jit(
+    _evict, donate_argnames=_resolve_cache_donation(),
+))
+
+
+def _admit_merge(
+    last_token: jax.Array,     # (N,) int32 device-resident decode carry
+    slot_keys: jax.Array,      # (N, 2) uint32 per-request PRNG keys
+    slots: jax.Array,          # (A,) int32 — distinct slot ids
+    tok0s: jax.Array,          # (A,) int32 first sampled tokens (admit output)
+    keys: jax.Array,           # (A, 2) uint32 per-request keys (admit output)
+    valid: jax.Array,          # (A,) bool — rows actually admitted
+):
+    """Async loop: merge an admission batch's first tokens and PRNG keys into
+    the device-resident decode carry (see ``cache.merge_admit_carry``).
+    ``tok0s``/``keys`` are usually still in-flight futures of an admit
+    program — composing here instead of on the host is what keeps the
+    pipeline free of syncs between dispatches."""
+    return C.merge_admit_carry(last_token, slot_keys, slots, tok0s, keys, valid)
+
+
+_admit_merge_jit = _LazyJit(lambda: jax.jit(_admit_merge))
 
 
 def _jit_cache_size(fn) -> int:
@@ -317,6 +459,7 @@ def scheduler_compile_stats() -> Dict[str, int]:
         "admit_fused": _jit_cache_size(_admit_fused_jit),
         "admit_decode": _jit_cache_size(_admit_decode_jit),
         "admit_paged": _jit_cache_size(_admit_fused_paged_jit),
+        "admit_merge": _jit_cache_size(_admit_merge_jit),
         "evict": _jit_cache_size(_evict_jit),
     }
 
@@ -355,24 +498,103 @@ class CompletedRequest:
 
 @dataclasses.dataclass
 class SchedulerStats:
-    ticks: int = 0                  # decode ticks executed
-    busy_slot_steps: int = 0        # sum over ticks of active slot count
-    idle_slot_steps: int = 0        # capacity - busy over executed ticks
+    """Serve-session counters and gauges.
+
+    Every field and derived property is documented in :data:`DOCS` (one line
+    per metric, asserted complete by ``tests/test_docs.py``) so the metric
+    names the serve benchmarks emit into their ``BENCH_*.json`` artifacts
+    are self-describing — benches embed ``SchedulerStats.DOCS`` under a
+    ``"field_docs"`` key.
+
+    Two clocks appear below.  *Scheduler ticks* (``ticks``, the latency
+    lists) count executed decode steps only — one decode step across all
+    slots == one tick, admission is free — and are the unit of ``Request
+    .arrival``.  *Work ticks* (``work_ticks``, ``max_decode_gap_ticks``)
+    additionally charge each admission its prefill cost, normalized to
+    decode widths (``ceil(bucketed prompt tokens / num_slots)``), so they
+    approximate device occupancy and make prefill-induced decode starvation
+    measurable deterministically (no wall-clock flakiness)."""
+
+    DOCS: ClassVar[Dict[str, str]] = {
+        "ticks": "decode ticks executed (1 tick = one decode step across "
+                 "all slots; steps_per_tick of them per decode chunk)",
+        "busy_slot_steps": "slot-steps that produced an accepted token "
+                           "(sum over chunks of accepted tokens)",
+        "idle_slot_steps": "slot-steps wasted: empty slots, mid-chunk "
+                           "overshoot, and async garbage chunks "
+                           "(ticks * num_slots - busy_slot_steps)",
+        "admitted": "requests admitted (prefilled into a slot)",
+        "completed": "requests finished (eos or length)",
+        "generated_tokens": "tokens accepted across all requests, "
+                            "including each request's admit-time first token",
+        "admit_calls": "batched prefill dispatches (one per admission "
+                       "batch, covering 1..num_slots requests)",
+        "prefills": "prompt-bucket size -> requests prefilled at that "
+                    "bucket",
+        "peak_active": "max concurrently-resident requests",
+        "peak_blocks_in_use": "paged layout: max KV pool blocks held at "
+                              "once",
+        "ttft_ticks": "per-request time-to-first-token in scheduler ticks "
+                      "since the request's arrival (queue wait + prefill), "
+                      "appended at admit",
+        "latency_ticks": "per-request total latency in scheduler ticks "
+                         "since arrival, appended at finish",
+        "prefill_tokens": "bucketed prompt tokens admitted (the device "
+                          "prefill work the interleaving budget meters; "
+                          "excludes admit-width padding rows)",
+        "work_ticks": "device-work clock: decode steps + prefill charged "
+                      "at bucketed tokens / num_slots, integerized "
+                      "through a carry so rounding never compounds",
+        "prefill_stall_ticks": "scheduler steps where the interleaving "
+                               "budget deferred an otherwise-admissible "
+                               "request (slots and memory both fit)",
+        "max_decode_gap_ticks": "starvation gauge: worst work-tick gap "
+                                "between a resident request's consecutive "
+                                "accepted tokens (<= steps_per_tick + "
+                                "ceil(prefill_decode_ratio * "
+                                "steps_per_tick) under the ratio policy)",
+        "host_block_s": "wall seconds the host spent blocked on device "
+                        "token transfers (np.asarray of chunk outputs)",
+        "wall_s": "wall seconds spent inside step() in total",
+        "slot_utilization": "busy_slot_steps / (busy + idle): fraction of "
+                            "decode capacity that produced accepted tokens",
+        "ttft_p50": "median time-to-first-token, scheduler ticks",
+        "ttft_p95": "95th-percentile time-to-first-token, scheduler ticks",
+        "latency_p50": "median request latency, scheduler ticks",
+        "latency_p95": "95th-percentile request latency, scheduler ticks",
+        "overlap_fraction": "1 - host_block_s / wall_s: fraction of step() "
+                            "wall time NOT spent blocked on the device — "
+                            "the async loop's pipelining win (sync loop "
+                            "reports its serial block share for contrast)",
+    }
+
+    ticks: int = 0
+    busy_slot_steps: int = 0
+    idle_slot_steps: int = 0
     admitted: int = 0
     completed: int = 0
-    generated_tokens: int = 0       # across all requests (incl. admit token)
-    admit_calls: int = 0            # batched prefill dispatches
-    prefills: Dict[int, int] = dataclasses.field(default_factory=dict)  # bucket -> requests
-    peak_active: int = 0            # max concurrently-resident requests
-    peak_blocks_in_use: int = 0     # paged layout: max pool blocks held at once
-    # per-request latencies in scheduler ticks, appended at admit / finish
+    generated_tokens: int = 0
+    admit_calls: int = 0
+    prefills: Dict[int, int] = dataclasses.field(default_factory=dict)
+    peak_active: int = 0
+    peak_blocks_in_use: int = 0
     ttft_ticks: List[int] = dataclasses.field(default_factory=list)
     latency_ticks: List[int] = dataclasses.field(default_factory=list)
+    prefill_tokens: int = 0
+    work_ticks: int = 0
+    prefill_stall_ticks: int = 0
+    max_decode_gap_ticks: int = 0
+    host_block_s: float = 0.0
+    wall_s: float = 0.0
 
     @property
     def slot_utilization(self) -> float:
         cap = self.busy_slot_steps + self.idle_slot_steps
         return self.busy_slot_steps / cap if cap else 0.0
+
+    @property
+    def overlap_fraction(self) -> float:
+        return 1.0 - self.host_block_s / self.wall_s if self.wall_s else 0.0
 
     @staticmethod
     def _pct(xs: List[int], q: float) -> float:
@@ -403,6 +625,29 @@ class _ActiveSlot:
     slot: int
     tokens: List[int]
     admitted_tick: int
+    # set by _finish; the async loop uses it to skip chunk tokens of rows
+    # whose completion was discovered after their last chunk was dispatched
+    done: bool = False
+    # slot/blocks already freed (predictive early turnover — the async loop
+    # releases a row whose in-flight chunk provably completes it by length,
+    # so a successor can refill the slot before the harvest)
+    released: bool = False
+
+
+@dataclasses.dataclass
+class _Inflight:
+    """One dispatched-but-unharvested decode chunk (async loop).
+
+    ``states`` snapshots ``self._active`` at dispatch time: only those rows
+    may accept this chunk's tokens (rows admitted later first appear in the
+    *next* chunk).  ``work_end`` is the work-tick clock just after this
+    chunk's steps were charged — the emission time used by the starvation
+    gauge."""
+
+    toks: Any                  # (steps, N) device future
+    steps: int
+    states: List[Optional[_ActiveSlot]]
+    work_end: int
 
 
 # ---------------------------------------------------------------------------
@@ -428,7 +673,20 @@ class ServeSession:
     the default, and plain FIFO when priorities are untouched), ``"fifo"``
     (ignore priorities), or ``"sjf"`` — shortest job first on
     ``max_new + bucketed prompt len``, which minimizes mean latency on a
-    drain tail."""
+    drain tail.
+
+    ``loop="async"`` (default) runs the double-buffered pipeline —
+    ``step()`` dispatches the next decode chunk before blocking on the
+    previous one's tokens, keeping the decode carry device-resident; pass
+    ``loop="sync"`` for the PR-3 strictly-alternating loop (the parity
+    baseline ``benchmarks/serve_async.py`` measures against).
+    ``prefill_decode_ratio`` / ``prefill_token_budget`` bound the bucketed
+    prompt tokens each ``step()`` may admit while decodes are resident
+    (``ratio * n_active * steps_per_tick`` resp. a flat budget), so a burst
+    of long prompts spreads over several steps instead of stalling every
+    resident decode behind one giant prefill train.  ``close()`` flushes
+    the in-flight chunk and seals the session: later ``submit``/``step``
+    raise ``RuntimeError``."""
 
     def __init__(
         self,
@@ -447,6 +705,9 @@ class ServeSession:
         block_size: int = 16,
         num_blocks: Optional[int] = None,
         policy: str = "priority",
+        loop: str = "async",
+        prefill_decode_ratio: Optional[float] = None,
+        prefill_token_budget: Optional[int] = None,
     ):
         if not cfg.embed_input:
             raise ValueError(f"{cfg.name}: token serving requires an embed-input arch")
@@ -454,12 +715,30 @@ class ServeSession:
             raise ValueError(f"cache_layout {cache_layout!r} not in {CACHE_LAYOUTS}")
         if policy not in ADMISSION_POLICIES:
             raise ValueError(f"policy {policy!r} not in {ADMISSION_POLICIES}")
+        if loop not in SERVE_LOOPS:
+            raise ValueError(f"loop {loop!r} not in {SERVE_LOOPS}")
+        if prefill_decode_ratio is not None and prefill_token_budget is not None:
+            raise ValueError(
+                "prefill_decode_ratio and prefill_token_budget are alternative "
+                "interleaving policies — set at most one"
+            )
+        if prefill_decode_ratio is not None and prefill_decode_ratio <= 0:
+            raise ValueError(
+                f"prefill_decode_ratio must be > 0, got {prefill_decode_ratio}"
+            )
+        if prefill_token_budget is not None and prefill_token_budget < 1:
+            raise ValueError(
+                f"prefill_token_budget must be >= 1, got {prefill_token_budget}"
+            )
         self.cfg = cfg
         self.params = params
         self.sampling = sampling if sampling is not None else SamplingConfig()
         self.max_len = int(max_len)
         self.layout = cache_layout
         self.policy = policy
+        self.loop = loop
+        self.prefill_decode_ratio = prefill_decode_ratio
+        self.prefill_token_budget = prefill_token_budget
         self.buckets = C.PromptBuckets(prompt_buckets)
         if self.buckets.max_size > self.max_len:
             raise ValueError(
@@ -529,6 +808,20 @@ class ServeSession:
         self.stats = SchedulerStats()
         self._completed: Dict[int, CompletedRequest] = {}
         self._just_finished: List[int] = []     # drained by each step()
+        # -- async pipeline state --------------------------------------------
+        self._closed = False
+        self._inflight: Optional[_Inflight] = None
+        # device-resident decode carry: the async loop never fetches these,
+        # it chains chunk outputs and admit merges into the next dispatch
+        self._lt_dev: jax.Array = jnp.zeros((num_slots,), jnp.int32)
+        self._sk_dev: jax.Array = jnp.zeros((num_slots, 2), jnp.uint32)
+        # admissions dispatched since the last harvest: their first sampled
+        # tokens are fetched together with the next chunk's tokens
+        self._pending_tok0: List[Tuple[List[_ActiveSlot], Any]] = []
+        # work-tick of each slot occupant's latest accepted token (gauge)
+        self._last_emit_work = np.zeros((num_slots,), np.int64)
+        # prefill-token residue below one work tick (carried, not ceil'd)
+        self._prefill_carry = 0
 
     # -- queue ---------------------------------------------------------------
 
@@ -545,9 +838,15 @@ class ServeSession:
 
         Every shape constraint is validated HERE, naming the request — a
         request that can never be admitted must fail at submit, not deep
-        inside an admission tick."""
+        inside an admission tick.  A sealed session (after ``close()``)
+        refuses loudly rather than queueing work that will never run."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         rid = self._next_id if req_id is None else req_id
+        if self._closed:
+            raise RuntimeError(
+                f"request {rid}: submitted after close() — the session is "
+                "sealed and its pipeline flushed; create a new ServeSession"
+            )
         if prompt.size < 1:
             raise ValueError(f"request {rid}: empty prompt")
         if max_new < 1:
@@ -652,6 +951,12 @@ class ServeSession:
             prompt_lens[i] = plen
             valid[i] = True
             req_ids[i] = req.req_id
+        # valid rows -> their acquired slots; padding rows -> distinct other
+        # slot ids, keeping `slots` collision-free (deterministic scatter,
+        # and the no-op rows rewrite rows they gathered — see _scatter_rows
+        # and merge_admit_carry)
+        rest = [s for s in range(self.num_slots) if s not in row_slot]
+        slots = np.asarray((row_slot + rest)[:A], np.int32)
         if self.layout == "paged":
             nb = -(-bucket // self.block_size)
             block_ids = np.full((A, nb), self.num_blocks, np.int32)
@@ -676,12 +981,6 @@ class ServeSession:
                 self.stats.peak_blocks_in_use, self.blocks.busy_count
             )
         else:
-            # valid rows -> their acquired slots; padding rows -> distinct
-            # other slot ids, keeping `slots` collision-free (deterministic
-            # scatter, and the no-op rows rewrite rows they gathered — see
-            # _scatter_rows)
-            rest = [s for s in range(self.num_slots) if s not in row_slot]
-            slots = np.asarray((row_slot + rest)[:A], np.int32)
             if self.prefill_mode == "fused":
                 self.cache, tok0s, req_keys = _admit_fused_jit(
                     cfg=self.cfg, params=self.params, cache=self.cache,
@@ -697,16 +996,57 @@ class ServeSession:
                     sampling=self.sampling,
                     max_len=self.max_len, cache_dtype=self.cache_dtype,
                 )
-        tok0s = np.asarray(tok0s)
-        req_keys = np.asarray(req_keys, np.uint32)
         self.stats.admit_calls += 1
         self.stats.prefills[bucket] = self.stats.prefills.get(bucket, 0) + len(reqs)
+        tok_sum = sum(self.buckets.bucket(r.prompt.size) for r in reqs)
+        self.stats.prefill_tokens += tok_sum
+        # prefill device work in decode-width-normalized ticks (the unit of
+        # the starvation gauge); padding rows are a constant-factor artifact
+        # the budget already ignores, so charge the metered tokens.  The
+        # integer carry keeps rounding from compounding across admission
+        # batches — that is what makes the documented gap bound
+        # steps_per_tick + ceil(R * steps_per_tick) provable (a per-batch
+        # ceil could overcharge a step by one tick per batch)
+        self._prefill_carry += tok_sum
+        self.stats.work_ticks += self._prefill_carry // self.num_slots
+        self._prefill_carry %= self.num_slots
+
+        if self.loop == "async":
+            # no host sync: merge the admit program's (still in-flight)
+            # first tokens + keys into the device-resident decode carry so
+            # these rows join the next dispatched chunk; their tok0s are
+            # fetched at the next harvest (eos/max_new==1 finishes are then
+            # discovered one chunk late — the garbage chunk is discarded)
+            self._lt_dev, self._sk_dev = _admit_merge_jit(
+                self._lt_dev, self._sk_dev, slots, tok0s, req_keys, valid
+            )
+            states: List[_ActiveSlot] = []
+            for i, req in enumerate(reqs):
+                slot = row_slot[i]
+                self._cur_len[slot] = int(prompt_lens[i])
+                self._last_emit_work[slot] = self.stats.work_ticks
+                self.stats.admitted += 1
+                self.stats.ttft_ticks.append(self.clock - req.arrival)
+                state = _ActiveSlot(req, slot, [], self.clock)
+                self._active[slot] = state
+                states.append(state)
+            self._pending_tok0.append((states, tok0s))
+            return
+
+        # the sync loop blocks here until the prefill program completes —
+        # time it as host_block_s so overlap_fraction stays comparable with
+        # the async loop (whose tok0 fetches are timed in _harvest)
+        tb = time.perf_counter()
+        tok0s = np.asarray(tok0s)
+        req_keys = np.asarray(req_keys, np.uint32)
+        self.stats.host_block_s += time.perf_counter() - tb
         eos = self.sampling.eos_id
         for i, req in enumerate(reqs):
             slot, tok0 = row_slot[i], int(tok0s[i])
             self._last_token[slot] = tok0
             self._cur_len[slot] = int(prompt_lens[i])
             self._slot_keys[slot] = req_keys[i]
+            self._last_emit_work[slot] = self.stats.work_ticks
             self.stats.admitted += 1
             self.stats.generated_tokens += 1
             self.stats.ttft_ticks.append(self.clock - req.arrival)
@@ -716,14 +1056,19 @@ class ServeSession:
             else:
                 self._active[slot] = state
 
-    def _finish(self, state: _ActiveSlot, reason: str) -> None:
-        self._active[state.slot] = None
+    def _release_resources(self, state: _ActiveSlot) -> None:
+        """Free ``state``'s slot — and under the paged layout every held
+        block plus the unused remainder of its worst-case reservation —
+        exactly once (``state.released`` guards the double-call when a
+        predictively released row is later finished at harvest).  Stale
+        cache contents are invisible: a slot stripe / block re-enters
+        attention only after its next owner's prefill/decode writes
+        overwrite the exposed positions."""
+        state.released = True
+        if self._active[state.slot] is state:   # a successor may already own it
+            self._active[state.slot] = None
         self.pool.release(state.slot)
         if self.layout == "paged":
-            # free every held block immediately and drop the unused remainder
-            # of the worst-case reservation; stale block contents are
-            # invisible (a block re-enters attention only after its next
-            # owner's prefill/decode writes overwrite the exposed positions)
             slot = state.slot
             self.blocks.release_many(self._held[slot])
             self._held[slot] = []
@@ -732,6 +1077,11 @@ class ServeSession:
             self._future[slot] = 0
         elif self.zero_on_evict:
             self.cache = _evict_jit(self.cache, np.int32(state.slot))
+
+    def _finish(self, state: _ActiveSlot, reason: str) -> None:
+        state.done = True
+        if not state.released:
+            self._release_resources(state)
         self.stats.completed += 1
         self.stats.latency_ticks.append(self.clock - state.req.arrival)
         self._just_finished.append(state.req.req_id)
@@ -769,62 +1119,88 @@ class ServeSession:
 
     @property
     def drained(self) -> bool:
-        return not (self._pending or self._ready or self.n_active)
+        return not (
+            self._pending or self._ready or self.n_active or self._inflight
+        )
 
     def _drain_finished(self) -> List[CompletedRequest]:
         done = [self._completed[i] for i in self._just_finished]
         self._just_finished.clear()
         return done
 
-    def _pop_admissible(self) -> List[Request]:
-        """Pop ready requests that fit the free slots and (paged) the block
-        pool.  Memory admission is reservation-based: a request is popped
-        only if its worst-case block count fits what the pool can still
-        promise (``free - reserved``), and that worst case is reserved on
-        the spot — which is exactly what makes mid-decode appends and the
-        no-preemption guarantee sound.  The queue head blocks admission when
-        it doesn't fit (no skip-ahead): policy order is preserved and a big
-        request cannot be starved by a stream of small ones."""
+    def _prefill_budget(self) -> float:
+        """Bucketed prompt tokens this step may admit under the interleaving
+        policy.  Unlimited when no policy is set, and unlimited while no
+        decode is resident — there is nothing to starve, and the queue must
+        be able to drain (a head whose bucket exceeds the per-step budget
+        therefore waits at most until the resident decodes finish)."""
+        if self.prefill_decode_ratio is None and self.prefill_token_budget is None:
+            return float("inf")
+        if self.n_active == 0:
+            return float("inf")
+        if self.prefill_token_budget is not None:
+            return float(self.prefill_token_budget)
+        return self.prefill_decode_ratio * self.n_active * self.steps_per_tick
+
+    def _pop_admissible(
+        self, budget: float = float("inf")
+    ) -> Tuple[List[Request], float, bool]:
+        """Pop ready requests that fit the free slots, (paged) the block
+        pool, and the prefill-token ``budget``.  Memory admission is
+        reservation-based: a request is popped only if its worst-case block
+        count fits what the pool can still promise (``free - reserved``),
+        and that worst case is reserved on the spot — which is exactly what
+        makes mid-decode appends and the no-preemption guarantee sound.  The
+        queue head blocks admission when it doesn't fit (no skip-ahead):
+        policy order is preserved and a big request cannot be starved by a
+        stream of small ones.  Returns ``(batch, remaining budget, stalled)``
+        where ``stalled`` means the head was deferred by the budget alone
+        (slots and memory both had room)."""
         batch: List[Request] = []
+        stalled = False
         while self._ready and len(batch) < self.pool.free_count:
             req = self._ready[0][2]
             if self.layout == "paged":
                 worst = self._worst_blocks(req.prompt.size, req.max_new)
                 if worst > self.blocks.free_count - self._reserved_total:
                     break
+            b = self.buckets.bucket(req.prompt.size)
+            if b > budget:
+                stalled = True
+                break
+            if self.layout == "paged":
                 self._reserved_total += worst
+            budget -= b
             heapq.heappop(self._ready)
             batch.append(req)
-        return batch
+        return batch, budget, stalled
 
-    def step(self) -> List[CompletedRequest]:
-        """Admit what fits, run one decode chunk, release finished slots.
-        Returns the requests completed during this call."""
-        self._pull_arrivals()
+    def _admit_phase(self) -> None:
+        """Admit ready requests in policy order, subject to free slots,
+        (paged) the block-pool reservation, and the interleaving budget —
+        shared across every admission batch of this step."""
+        budget = self._prefill_budget()
+        stalled = False
         while self._ready and self.pool.free_count:
-            batch = self._pop_admissible()
+            batch, budget, st = self._pop_admissible(budget)
+            stalled = stalled or st
             if not batch:
-                break                 # head doesn't fit the block pool yet
-            self._admit_many(batch)   # may free slots again (eos/max_new==1)
+                break                 # head doesn't fit the pool/budget yet
+            self._admit_many(batch)   # sync loop: may free slots again
+        if stalled:
+            self.stats.prefill_stall_ticks += 1
         self.stats.peak_active = max(self.stats.peak_active, self.n_active)
 
-        if self.n_active == 0:
-            # idle: jump to the next arrival instead of burning empty ticks
-            if self._pending:
-                self.clock = max(self.clock + 1, self._pending[0].arrival)
-            else:
-                self.clock += 1
-            return self._drain_finished()
-
-        active = np.asarray([s is not None for s in self._active], bool)
+    def _chunk_inputs(self):
+        """Dispatch inputs shared by both loops: the active-row mask and
+        (paged) this chunk's block tables, grown to cover every position the
+        chunk could write an ACCEPTED token to (overshoot past max_new
+        targets sentinel entries and is dropped); the admission reservation
+        guarantees these acquires can never fail."""
         steps = self.steps_per_tick
         tables = None
         block_size = 0
         if self.layout == "paged":
-            # grow each row's table to cover every position this chunk could
-            # write an ACCEPTED token to (overshoot past max_new targets
-            # sentinel entries and is dropped); the admission reservation
-            # guarantees these acquires can never fail
             for slot, state in enumerate(self._active):
                 if state is None:
                     continue
@@ -838,23 +1214,30 @@ class ServeSession:
             )
             tables = self._tables.copy()
             block_size = self.block_size
-        self.cache, toks = _decode_tick_jit(
-            cfg=self.cfg, params=self.params, cache=self.cache,
-            last_token=self._last_token, cur_len=self._cur_len,
-            active=active, slot_keys=self._slot_keys, tables=tables,
-            sampling=self.sampling, steps=steps, block_size=block_size,
-        )
-        toks = np.asarray(toks)                  # (steps, N)
-        self.clock += steps
-        self.stats.ticks += steps
+        active = np.asarray([s is not None for s in self._active], bool)
+        return active, tables, block_size, steps
 
+    def _accept_chunk(
+        self,
+        states: List[Optional[_ActiveSlot]],
+        toks: np.ndarray,
+        steps: int,
+        work_end: int,
+    ) -> None:
+        """Accept a fetched chunk's tokens for the rows that were live at
+        its dispatch: each row takes tokens until it finishes (eos /
+        max_new) and discards the bounded overshoot; rows whose completion
+        was discovered after the dispatch (``state.done``) contribute only
+        idle steps.  Updates the busy/idle accounting and the starvation
+        gauge (``work_end`` is the chunk's position on the work clock)."""
         eos = self.sampling.eos_id
         accepted = 0
-        for slot, state in enumerate(self._active):
-            if state is None:
+        for slot, state in enumerate(states):
+            if state is None or state.done:
                 continue
-            # device advanced this row all `steps` steps; host accepts tokens
-            # until the row finishes and discards the (bounded) overshoot
+            # predictively released rows may already have a successor in the
+            # slot; leave the successor's emission mark alone
+            early = state.released
             for s in range(steps):
                 tok = int(toks[s, slot])
                 state.tokens.append(tok)
@@ -865,17 +1248,185 @@ class ServeSession:
                 if len(state.tokens) >= state.req.max_new:
                     self._finish(state, "length")
                     break
-            self._cur_len[slot] = min(self._cur_len[slot] + steps, self.max_len - 1)
-            self._last_token[slot] = int(toks[steps - 1, slot])
+            if not early:
+                gap = int(work_end - self._last_emit_work[slot])
+                if gap > self.stats.max_decode_gap_ticks:
+                    self.stats.max_decode_gap_ticks = gap
+                self._last_emit_work[slot] = work_end
         self.stats.busy_slot_steps += accepted
         self.stats.idle_slot_steps += self.num_slots * steps - accepted
         self.stats.generated_tokens += accepted
+
+    def step(self) -> List[CompletedRequest]:
+        """Admit what fits (under the interleaving budget), run one decode
+        chunk, release finished slots.  Returns the requests completed
+        during this call — under ``loop="async"`` completions surface one
+        step after their chunk was dispatched (the pipeline lag)."""
+        if self._closed:
+            raise RuntimeError(
+                "ServeSession is closed — its pipeline was flushed by "
+                "close(); create a new session"
+            )
+        t0 = time.perf_counter()
+        try:
+            if self.loop == "async":
+                return self._step_async()
+            return self._step_sync()
+        finally:
+            self.stats.wall_s += time.perf_counter() - t0
+
+    def _step_sync(self) -> List[CompletedRequest]:
+        """PR-3 strictly-alternating loop: dispatch one chunk, block on its
+        tokens, then do every piece of bookkeeping — the parity baseline the
+        async loop is benchmarked against."""
+        self._pull_arrivals()
+        self._admit_phase()
+
+        if self.n_active == 0:
+            # idle: jump to the next arrival instead of burning empty ticks
+            if self._pending:
+                self.clock = max(self.clock + 1, self._pending[0].arrival)
+            else:
+                self.clock += 1
+            return self._drain_finished()
+
+        active, tables, block_size, steps = self._chunk_inputs()
+        self.cache, toks, _ = _decode_tick_jit(
+            cfg=self.cfg, params=self.params, cache=self.cache,
+            last_token=self._last_token, cur_len=self._cur_len,
+            active=active, slot_keys=self._slot_keys, tables=tables,
+            sampling=self.sampling, steps=steps, block_size=block_size,
+        )
+        tb = time.perf_counter()
+        toks = np.asarray(toks)                  # (steps, N)
+        self.stats.host_block_s += time.perf_counter() - tb
+        self.clock += steps
+        self.stats.ticks += steps
+        self.stats.work_ticks += steps
+
+        states = list(self._active)
+        self._accept_chunk(states, toks, steps, self.stats.work_ticks)
+        for slot, state in enumerate(states):
+            if state is None:
+                continue
+            # device advanced this row all `steps` steps whether or not it
+            # finished mid-chunk; keep the host view in lockstep
+            self._cur_len[slot] = min(self._cur_len[slot] + steps, self.max_len - 1)
+            self._last_token[slot] = int(toks[steps - 1, slot])
         return self._drain_finished()
+
+    def _release_predicted_done(self) -> None:
+        """Predictive early slot turnover (async loop): a row whose
+        in-flight chunk provably completes it by length — pending first
+        token + accepted tokens + the chunk's steps reach ``max_new``; an
+        eos can only finish it *sooner* — releases its slot and blocks NOW,
+        so this step's admissions refill the slot without waiting for the
+        harvest.  The successor's admit and first chunk queue behind the
+        in-flight chunk on the device stream, so the retiring row's stale
+        writes land before the successor's prefill overwrites them and are
+        never attended.  Its tokens still arrive at the next harvest
+        (``_Inflight.states`` holds the reference); ``state.released``
+        keeps the resource frees exactly-once."""
+        fl = self._inflight
+        if fl is None:
+            return
+        for state in fl.states:
+            if state is None or state.done or state.released:
+                continue
+            tok0_pending = 0 if state.tokens else 1
+            if len(state.tokens) + tok0_pending + fl.steps >= state.req.max_new:
+                self._release_resources(state)
+
+    def _step_async(self) -> List[CompletedRequest]:
+        """Double-buffered pipeline step: admit (no sync — first tokens
+        merge into the device carry), dispatch chunk N+1, and only then
+        block on chunk N's tokens — so queue management, admission, and
+        finish bookkeeping for chunk N overlap the device computing N+1."""
+        self._release_predicted_done()
+        self._pull_arrivals()
+        self._admit_phase()
+
+        prev, new = self._inflight, None
+        if self.n_active:
+            active, tables, block_size, steps = self._chunk_inputs()
+            # cur_len is copied because the host mutates it while the chunk
+            # is in flight (numpy operands may be aliased zero-copy by the
+            # device buffer); `active` and `tables` are fresh arrays already
+            self.cache, toks_f, self._lt_dev = _decode_tick_jit(
+                cfg=self.cfg, params=self.params, cache=self.cache,
+                last_token=self._lt_dev, cur_len=self._cur_len.copy(),
+                active=active, slot_keys=self._sk_dev, tables=tables,
+                sampling=self.sampling, steps=steps, block_size=block_size,
+            )
+            self.clock += steps
+            self.stats.ticks += steps
+            self.stats.work_ticks += steps
+            new = _Inflight(toks_f, steps, list(self._active),
+                            self.stats.work_ticks)
+            # advance the host view past the chunk just dispatched (the
+            # device carry advances identically; the clamp matches the sync
+            # loop's post-harvest update)
+            self._cur_len = np.minimum(
+                self._cur_len + steps * active, self.max_len - 1
+            ).astype(np.int32)
+        elif prev is None:
+            # idle: jump to the next arrival instead of burning empty ticks
+            if self._pending:
+                self.clock = max(self.clock + 1, self._pending[0].arrival)
+            else:
+                self.clock += 1
+        self._inflight = new
+        if prev is not None:
+            self._harvest(prev)
+        return self._drain_finished()
+
+    def _harvest(self, fl: _Inflight) -> None:
+        """Block on an in-flight chunk's token transfer (the device is
+        already executing the next chunk) and run the deferred bookkeeping:
+        admit-time first tokens queued since the previous harvest, then the
+        chunk's tokens for the rows that were live at its dispatch."""
+        tb = time.perf_counter()
+        toks = np.asarray(fl.toks)               # (steps, N)
+        pend, self._pending_tok0 = self._pending_tok0, []
+        drained = [(states, np.asarray(t0s)) for states, t0s in pend]
+        self.stats.host_block_s += time.perf_counter() - tb
+
+        eos = self.sampling.eos_id
+        for states, tok0s in drained:
+            for i, state in enumerate(states):
+                tok0 = int(tok0s[i])
+                state.tokens.append(tok0)
+                self.stats.generated_tokens += 1
+                if state.req.max_new == 1 or (eos >= 0 and tok0 == eos):
+                    # discovered one chunk late: the row decoded one garbage
+                    # chunk meanwhile (skipped below via state.done)
+                    self._finish(
+                        state, "eos" if (eos >= 0 and tok0 == eos) else "length"
+                    )
+        self._accept_chunk(fl.states, toks, fl.steps, fl.work_end)
+
+    def close(self) -> Dict[int, CompletedRequest]:
+        """Flush the pipeline (harvest the in-flight chunk and any pending
+        admit tokens) and seal the session: subsequent ``submit``/``step``/
+        ``run`` raise ``RuntimeError``.  Ready/pending requests that were
+        never admitted stay unserved.  Idempotent; returns the completed
+        results."""
+        if not self._closed:
+            fl, self._inflight = self._inflight, None
+            if fl is not None:
+                self._harvest(fl)
+            self._closed = True
+        return dict(self._completed)
 
     def run(self, max_steps: Optional[int] = None) -> Dict[int, CompletedRequest]:
         """Drive until every queued request completes, or ``max_steps``
         calls to ``step()`` (each executes up to ``steps_per_tick`` decode
         ticks — a watchdog on scheduler iterations, not device ticks)."""
+        if self._closed:
+            raise RuntimeError(
+                "ServeSession is closed — its pipeline was flushed by "
+                "close(); create a new session"
+            )
         n = 0
         while not self.drained:
             self.step()
@@ -891,9 +1442,14 @@ class ServeSession:
     # -- warmup / compile accounting ------------------------------------------
 
     def warmup(self) -> Dict[str, int]:
-        """Compile the decode tick and every prompt-bucket prefill program
-        up-front (results discarded — session state is untouched). After
-        this, no request pattern recompiles; returns ``compile_stats``."""
+        """Compile the decode tick, the admit-carry merge, and every
+        prompt-bucket prefill program up-front.  All warmup rows are no-ops,
+        so session state is semantically untouched; the output caches are
+        *chained* back into ``self.cache`` (content-identical up to
+        positions that are invisible until overwritten) because the
+        cache-donating programs consume their input buffers on non-CPU
+        backends.  After this, no request pattern recompiles; returns
+        ``compile_stats``."""
         widths = sorted({self._admit_width(n) for n in range(1, self.num_slots + 1)})
         for A in widths:
             for b in self.buckets.sizes:
@@ -928,18 +1484,36 @@ class ServeSession:
                         max_len=self.max_len, cache_dtype=self.cache_dtype,
                     )
                 jax.block_until_ready(out)
+                self.cache = out[0]
+            # the async admit-carry merge compiles once per admit width;
+            # all-False valid keeps the device carry content intact.  tok0s
+            # and keys are jnp arrays on purpose: the real calls pass admit-
+            # program futures, and the jit cache keys numpy and jax.Array
+            # operands separately even at identical avals
+            self._lt_dev, self._sk_dev = _admit_merge_jit(
+                self._lt_dev, self._sk_dev, np.arange(A, dtype=np.int32),
+                jnp.zeros((A,), jnp.int32), jnp.zeros((A, 2), jnp.uint32),
+                np.zeros((A,), bool),
+            )
+        # warm the decode program with the SAME operand types the session's
+        # loop dispatches (async: device-resident carry; sync: host numpy) —
+        # mixing them would leave the first real chunk a cache miss
+        dev_carry = self.loop == "async"
         out = _decode_tick_jit(
             cfg=self.cfg, params=self.params, cache=self.cache,
-            last_token=self._last_token, cur_len=self._cur_len,
+            last_token=self._lt_dev if dev_carry else self._last_token,
+            cur_len=self._cur_len.copy(),
             active=np.zeros((self.num_slots,), bool),
-            slot_keys=self._slot_keys,
+            slot_keys=self._sk_dev if dev_carry else self._slot_keys,
             tables=self._tables.copy() if self.layout == "paged" else None,
             sampling=self.sampling, steps=self.steps_per_tick,
             block_size=self.block_size if self.layout == "paged" else 0,
         )
         jax.block_until_ready(out)
+        self.cache = out[0]
         if self.zero_on_evict:
-            jax.block_until_ready(_evict_jit(self.cache, np.int32(0)))
+            self.cache = _evict_jit(self.cache, np.int32(0))
+            jax.block_until_ready(self.cache)
         return self.compile_stats()
 
     def compile_stats(self) -> Dict[str, int]:

@@ -1,0 +1,298 @@
+"""Async double-buffered serve loop + prefill/decode interleaving.
+
+* **loop parity**: the async pipeline must be a pure scheduling change —
+  same trace, bit-identical greedy tokens vs the PR-3 sync loop (and, by
+  the sync loop's own oracle, vs standalone ``generate``), across both
+  cache layouts, with zero recompiles after ``warmup()``;
+* **starvation**: under a long-prompt burst with resident decodes, the
+  ``prefill_decode_ratio`` policy bounds the work-tick gap between a
+  resident request's consecutive accepted tokens by
+  ``steps_per_tick * (1 + ratio)`` — deterministically (work ticks charge
+  prefill by bucketed tokens, so no wall-clock flakiness);
+* **close()**: flushes the in-flight chunk; ``submit`` after ``close()``
+  raises a ``RuntimeError`` naming the request id, like every other
+  submit-time validation error.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.serve import ServeSession, scheduler_compile_stats
+from repro.serve.scheduler import SchedulerStats
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(**over):
+    return dataclasses.replace(
+        reduced_config(get_config("granite-3-2b")), remat=False, q_chunk=16, **over
+    )
+
+
+_PARAMS = {}
+
+
+def _params(cfg):
+    if cfg.name not in _PARAMS:
+        from repro.models.transformer import init_params
+
+        _PARAMS[cfg.name] = init_params(cfg, KEY)
+    return _PARAMS[cfg.name]
+
+
+def _session(cfg, **over):
+    kw = dict(num_slots=3, max_len=32, prompt_buckets=(4, 8))
+    kw.update(over)
+    return ServeSession(cfg, _params(cfg), **kw)
+
+
+def _trace(rng, n, vocab, *, plen=(2, 9), new=(1, 7), rate=1.0):
+    out, t = [], 0
+    for _ in range(n):
+        t += int(rng.poisson(rate))
+        out.append((rng.integers(0, vocab, int(rng.integers(*plen))),
+                    int(rng.integers(*new)), t))
+    return out
+
+
+def _burst_trace(rng, vocab):
+    """Resident decode-heavy requests, then a clump of long prompts — the
+    pattern the interleaving policy exists for."""
+    tr = [(rng.integers(0, vocab, 3), 24, 0),
+          (rng.integers(0, vocab, 4), 24, 0)]
+    tr += [(rng.integers(0, vocab, 15), 2, 2) for _ in range(6)]
+    return tr
+
+
+# ---------------------------------------------------------------------------
+# Fast tier: validation + close() semantics
+# ---------------------------------------------------------------------------
+
+
+def test_loop_and_policy_validation():
+    cfg = _cfg()
+    with pytest.raises(ValueError):
+        _session(cfg, loop="double-buffered")
+    with pytest.raises(ValueError):          # policies are alternatives
+        _session(cfg, prefill_decode_ratio=1.0, prefill_token_budget=8)
+    with pytest.raises(ValueError):
+        _session(cfg, prefill_decode_ratio=0.0)
+    with pytest.raises(ValueError):
+        _session(cfg, prefill_token_budget=0)
+
+
+def test_submit_after_close_raises_with_request_id():
+    """A sealed session must refuse new work loudly — silent queueing after
+    close() would drop the request on the floor."""
+    sess = _session(cfg := _cfg())
+    rid = sess.submit(np.asarray([1, 2], np.int32), max_new=2)
+    sess.run()
+    sess.close()
+    with pytest.raises(RuntimeError, match=r"request 1:.*close\(\)"):
+        sess.submit(np.asarray([3, 4], np.int32), max_new=2)
+    with pytest.raises(RuntimeError, match=r"request 7:.*close\(\)"):
+        sess.submit(np.asarray([3, 4], np.int32), max_new=2, req_id=7)
+    with pytest.raises(RuntimeError):
+        sess.step()
+    with pytest.raises(RuntimeError):
+        sess.run()
+    # idempotent, and results survive
+    assert set(sess.close()) == {rid}
+
+
+def test_close_flushes_inflight_chunk():
+    """close() harvests the dispatched-but-unfetched chunk: tokens accepted
+    so far are not lost, and the pool invariants hold."""
+    sess = _session(_cfg(), steps_per_tick=2)
+    rid = sess.submit(np.asarray([1, 2, 3], np.int32), max_new=8)
+    sess.step()                              # admit + dispatch, no harvest yet
+    assert sess._inflight is not None
+    sess.close()
+    assert sess._inflight is None
+    done = sess.results
+    # not finished (8 tokens requested), so the request is still incomplete;
+    # but the slot accounting was flushed consistently
+    st = sess.stats
+    assert st.busy_slot_steps + st.idle_slot_steps == st.ticks * sess.num_slots
+    assert rid not in done
+
+
+def test_stats_field_docs_complete():
+    """Every SchedulerStats field and public property carries a one-line
+    doc — the contract that makes the bench JSON keys self-describing."""
+    fields = {f.name for f in dataclasses.fields(SchedulerStats)}
+    props = {
+        n for n, v in vars(SchedulerStats).items()
+        if isinstance(v, property) and not n.startswith("_")
+    }
+    documented = set(SchedulerStats.DOCS)
+    assert fields | props == documented, (
+        f"undocumented: {sorted((fields | props) - documented)}; "
+        f"stale docs: {sorted(documented - (fields | props))}"
+    )
+
+
+# ---------------------------------------------------------------------------
+# Slow tier: parity, starvation, accounting
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("layout", ["slots", "paged"])
+def test_async_sync_parity_bit_identical(layout):
+    """Same trace through both loops: every request's greedy tokens must be
+    bit-identical (the async pipeline may only change *when* the host learns
+    about tokens, never the tokens themselves)."""
+    cfg = _cfg()
+    rng = np.random.default_rng(17)
+    trace = _trace(rng, 12, cfg.vocab_size, rate=1.5)
+    outs = {}
+    for loop in ("sync", "async"):
+        kw = dict(steps_per_tick=2, loop=loop)
+        if layout == "paged":
+            kw.update(cache_layout="paged", block_size=8)
+        sess = _session(cfg, **kw)
+        ids = [sess.submit(p, max_new=n, arrival=t, req_id=i)
+               for i, (p, n, t) in enumerate(trace)]
+        res = sess.run(max_steps=10_000)
+        assert sess.drained
+        outs[loop] = {i: res[i].tokens.tolist() for i in ids}
+        st = sess.stats
+        assert st.busy_slot_steps + st.idle_slot_steps == st.ticks * sess.num_slots
+        assert sum(len(r.tokens) - 1 for r in res.values()) == st.busy_slot_steps
+    assert outs["sync"] == outs["async"]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("loop", ["sync", "async"])
+def test_zero_recompiles_after_warmup_per_loop(loop):
+    """Both loops keep the fixed-compiled-shapes contract: warmup() covers
+    every program (including the async admit-carry merge), then no request
+    pattern recompiles."""
+    cfg = _cfg()
+    sess = _session(cfg, loop=loop)
+    sess.warmup()
+    before = scheduler_compile_stats()
+    rng = np.random.default_rng(3)
+    for p, n, t in _trace(rng, 10, cfg.vocab_size):
+        sess.submit(p, max_new=n, arrival=t)
+    sess.run()
+    assert scheduler_compile_stats() == before
+    assert sess.stats.completed == 10
+
+
+@pytest.mark.slow
+def test_async_handles_immediate_finishes():
+    """max_new=1 / first-token-eos completions are discovered one chunk late
+    in the async loop; no token may be lost or duplicated."""
+    cfg = _cfg()
+    sess = _session(cfg, steps_per_tick=3)
+    ids = [sess.submit(np.asarray([i + 1, i + 2], np.int32), max_new=1)
+           for i in range(5)]
+    ids.append(sess.submit(np.asarray([9, 8, 7], np.int32), max_new=6))
+    res = sess.run(max_steps=10_000)
+    assert sess.drained
+    for rid in ids[:-1]:
+        assert len(res[rid].tokens) == 1 and res[rid].finish_reason == "length"
+    assert len(res[ids[-1]].tokens) == 6
+    st = sess.stats
+    assert st.generated_tokens == 5 + 6
+    assert st.busy_slot_steps + st.idle_slot_steps == st.ticks * sess.num_slots
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("ratio", [1.0, 1.5])
+def test_interleaving_bounds_decode_starvation(ratio):
+    """Long-prompt burst against resident decodes: with
+    prefill_decode_ratio=R every resident decode's work-tick gap between
+    consecutive tokens stays <= steps_per_tick + ceil(R * steps_per_tick)
+    (the carry-based work charge makes the bound exact, including for
+    fractional R); the unthrottled scheduler violates that bound on the
+    same trace (which is exactly why the policy exists).  Outputs must not
+    change — the policy only reorders admission in time."""
+    import math
+
+    cfg = _cfg()
+    steps = 4
+    runs = {}
+    for label, kw in [("free", {}), ("ratio", dict(prefill_decode_ratio=ratio))]:
+        rng = np.random.default_rng(5)
+        sess = ServeSession(
+            cfg, _params(cfg), num_slots=4, max_len=64,
+            prompt_buckets=(4, 8, 16), steps_per_tick=steps, **kw,
+        )
+        ids = [sess.submit(p, max_new=n, arrival=t, req_id=i)
+               for i, (p, n, t) in enumerate(_burst_trace(rng, cfg.vocab_size))]
+        res = sess.run(max_steps=10_000)
+        assert sess.drained and sorted(res) == sorted(ids)
+        runs[label] = (res, sess.stats)
+    bound = steps + math.ceil(ratio * steps)
+    free_st, ratio_st = runs["free"][1], runs["ratio"][1]
+    assert ratio_st.max_decode_gap_ticks <= bound, (
+        ratio_st.max_decode_gap_ticks, bound)
+    assert free_st.max_decode_gap_ticks > bound          # the policy's raison d'etre
+    assert ratio_st.prefill_stall_ticks > 0              # it actually deferred work
+    assert free_st.prefill_stall_ticks == 0
+    assert {i: r.tokens.tolist() for i, r in runs["free"][0].items()} == \
+           {i: r.tokens.tolist() for i, r in runs["ratio"][0].items()}
+
+
+@pytest.mark.slow
+def test_token_budget_variant_bounds_starvation():
+    """prefill_token_budget=B is the flat-budget variant: per-step admitted
+    prefill work <= ceil(B / num_slots) work ticks, so the gap stays <=
+    steps_per_tick + ceil(B / num_slots)."""
+    cfg = _cfg()
+    steps, B, slots = 4, 16, 4
+    rng = np.random.default_rng(5)
+    sess = ServeSession(
+        cfg, _params(cfg), num_slots=slots, max_len=64,
+        prompt_buckets=(4, 8, 16), steps_per_tick=steps,
+        prefill_token_budget=B,
+    )
+    for i, (p, n, t) in enumerate(_burst_trace(rng, cfg.vocab_size)):
+        sess.submit(p, max_new=n, arrival=t, req_id=i)
+    sess.run(max_steps=10_000)
+    assert sess.drained
+    assert sess.stats.max_decode_gap_ticks <= steps + -(-B // slots)
+
+
+@pytest.mark.slow
+def test_serve_async_bench_smoke():
+    """The bench harness itself: a miniature trace must run all three arms
+    (sync / async / interleaved) with zero recompiles, zero cross-loop
+    token mismatches, a clean generate oracle, and self-describing metric
+    docs (the >= 1.15x speedup criterion is asserted on the real bench
+    config, solo-run — this pins the machinery)."""
+    import benchmarks.serve_async as B
+
+    r = B.bench(requests=10, repeats=1, oracle=2)
+    assert r["recompiles_after_warmup"] == 0
+    assert r["token_mismatches"] == 0 and r["policy_token_mismatches"] == 0
+    assert r["oracle_mismatches"] == 0
+    assert r["sync_tok_s"] > 0 and r["async_tok_s"] > 0
+    assert r["ratio_max_decode_gap_ticks"] <= r["ratio_gap_bound"]
+    assert set(r["field_docs"])  # embedded metric docs travel with the JSON
+
+
+@pytest.mark.slow
+def test_overlap_accounting_sane():
+    """wall_s/host_block_s are populated by both loops and overlap_fraction
+    stays a fraction (comparative claims belong to the solo-run bench, not
+    a suite that shares the CPU with other tests)."""
+    cfg = _cfg()
+    rng = np.random.default_rng(11)
+    trace = _trace(rng, 8, cfg.vocab_size)
+    for loop in ("sync", "async"):
+        sess = _session(cfg, loop=loop)
+        for i, (p, n, t) in enumerate(trace):
+            sess.submit(p, max_new=n, req_id=i)
+        sess.run()
+        st = sess.stats
+        assert st.wall_s > 0 and st.host_block_s >= 0
+        assert 0.0 <= st.overlap_fraction <= 1.0
+        assert st.work_ticks >= st.ticks             # prefill charged on top
+        assert st.prefill_tokens > 0

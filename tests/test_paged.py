@@ -221,7 +221,7 @@ def test_paged_allocation_tracks_actual_context():
         # drive admission by hand so the admit-time allocation is observable
         # before the first decode tick appends a boundary block
         sess._pull_arrivals()
-        sess._admit_many(sess._pop_admissible())
+        sess._admit_many(sess._pop_admissible()[0])
         seen = [len(sess._held[0])]
         assert seen[0] == -(-plen // bs), (plen, max_new, seen)   # admit alloc
         while not sess.drained:

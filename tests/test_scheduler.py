@@ -310,8 +310,12 @@ def test_sjf_policy_admits_short_jobs_first():
     short = sess.submit(np.asarray([5, 6], np.int32), max_new=2)           # 4+2
     res = sess.run()
     # all three compete at the first step: shortest key wins, longest waits
+    # (the async loop's predictive turnover may admit a successor while its
+    # predecessor's final chunk is still in flight, so policy order is
+    # asserted on admission ticks, not finish-vs-admit overlap)
     assert res[short].admitted_tick <= res[mid].admitted_tick
-    assert res[mid].finished_tick <= res[long_].admitted_tick
+    assert res[mid].admitted_tick <= res[long_].admitted_tick
+    assert res[short].finished_tick <= res[long_].finished_tick
 
 
 @pytest.mark.slow
@@ -346,7 +350,9 @@ def test_priority_admission_order():
     high = sess.submit(np.asarray([5, 6], np.int32), max_new=2, priority=1)
     res = sess.run()
     assert res[high].admitted_tick <= res[low].admitted_tick
-    assert res[first].finished_tick <= res[high].admitted_tick
+    # `first` holds the only slot, so both queued requests admit after it
+    # (possibly overlapping its in-flight final chunk — predictive turnover)
+    assert res[first].admitted_tick <= res[high].admitted_tick
 
 
 @pytest.mark.slow
