@@ -17,9 +17,11 @@ half the slot layout's KV memory) — and each request's output is checked
 against running its prompt alone through ``generate``: the
 order-independence oracle, which for the paged arm also pins the block
 gather/scatter path bit-identical to the contiguous one.  The paged arm
-runs twice, once per host loop (the PR-3 synchronous tick loop and the
-async double-buffered pipeline), so the oracle also pins the async loop's
-bit-exactness; see docs/serving.md for the full serve-stack architecture.
+runs under both host loops (the PR-3 synchronous tick loop and the async
+double-buffered pipeline) and once more with ``attn_impl="pallas"`` — the
+in-place Pallas paged-attention kernel (interpret mode on CPU) — so the
+oracle pins the async loop's and the kernel's token-exactness too; see
+docs/serving.md for the full serve-stack architecture.
 """
 import argparse
 import dataclasses
@@ -123,17 +125,21 @@ def main():
             for rid, prompt, max_new in trace
         }
 
-        for layout, loop in (("slots", "async"), ("paged", "sync"),
-                             ("paged", "async")):
-            print(f"\n-- continuous batching, {layout} KV cache, {loop} loop "
-                  "(float, greedy) --")
+        for layout, loop, impl in (("slots", "async", "gather"),
+                                   ("paged", "sync", "gather"),
+                                   ("paged", "async", "gather"),
+                                   ("paged", "async", "pallas")):
+            print(f"\n-- continuous batching, {layout} KV cache, {loop} loop, "
+                  f"{impl} attention (float, greedy) --")
             kw = dict(num_slots=4, max_len=max_len, prompt_buckets=(4, 8, 16),
                       loop=loop)
             if layout == "paged":
                 # half the slot layout's KV memory: blocks are handed out by
-                # actual context length, so the same trace still fits
+                # actual context length, so the same trace still fits; the
+                # pallas arm attends over the block pool in place (interpret
+                # mode on CPU — slow, but running the real kernel body)
                 kw.update(cache_layout="paged", block_size=8,
-                          num_blocks=4 * max_len // 8 // 2)
+                          num_blocks=4 * max_len // 8 // 2, attn_impl=impl)
             sess = ServeSession(base, params, **kw)
             sess.warmup()
             for rid, prompt, max_new in trace:
@@ -145,7 +151,7 @@ def main():
             st = sess.stats
             extra = (f", peak blocks {st.peak_blocks_in_use}/{sess.num_blocks}"
                      if layout == "paged" else "")
-            label = f"{layout}/{loop}"
+            label = f"{layout}/{loop}" + ("/pallas" if impl == "pallas" else "")
             print(f"{label:12s}: {n_gen/dt:8.1f} tok/s  "
                   f"({len(out)} mixed-length requests, slot utilization "
                   f"{st.slot_utilization*100:.1f}%, overlap "

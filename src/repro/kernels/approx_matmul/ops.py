@@ -7,22 +7,14 @@ semantically inert), and auto-selects interpret mode off-TPU.
 from __future__ import annotations
 
 import functools
-import os
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.approx_matmul.kernel import approx_matmul_kernel_call
+from repro.kernels.interpret import default_interpret as _default_interpret
 
 __all__ = ["approx_matmul_pallas", "select_blocks"]
-
-
-def _default_interpret() -> bool:
-    """Interpret off-TPU; REPRO_FORCE_INTERPRET=1 (set by the test session
-    fixture) forces it regardless of backend."""
-    if os.environ.get("REPRO_FORCE_INTERPRET", "") == "1":
-        return True
-    return jax.default_backend() != "tpu"
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:

@@ -4,6 +4,7 @@ from __future__ import annotations
 import jax
 
 from repro.kernels.approx_mul_eltwise.kernel import approx_mul_eltwise_call
+from repro.kernels.interpret import default_interpret
 
 __all__ = ["approx_mul_eltwise_pallas"]
 
@@ -17,7 +18,7 @@ def approx_mul_eltwise_pallas(
     interpret: bool | None = None,
 ) -> jax.Array:
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = default_interpret()
     return approx_mul_eltwise_call(
         a, b, multiplier=multiplier, block=block, interpret=interpret
     )

@@ -1,0 +1,20 @@
+"""Shared interpret-mode policy for every Pallas kernel family.
+
+One definition so the kernel families (approx_matmul, approx_mul_eltwise,
+paged_attention) and the benches can never drift: interpret off-TPU, and
+``REPRO_FORCE_INTERPRET=1`` (set by the test session fixture) forces the
+interpreter regardless of backend — CPU CI runs the real kernel bodies.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+__all__ = ["default_interpret"]
+
+
+def default_interpret() -> bool:
+    if os.environ.get("REPRO_FORCE_INTERPRET", "") == "1":
+        return True
+    return jax.default_backend() != "tpu"

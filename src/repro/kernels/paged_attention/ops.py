@@ -1,0 +1,70 @@
+"""Public wrapper around the Pallas paged decode-attention kernel.
+
+Validates shapes, normalizes index dtypes, and auto-selects interpret mode
+off-TPU (``REPRO_FORCE_INTERPRET=1`` forces it anywhere — the CPU CI path,
+which runs the real kernel body through the Pallas interpreter).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.interpret import default_interpret as _default_interpret
+from repro.kernels.paged_attention.kernel import paged_attention_kernel_call
+
+__all__ = ["paged_attention_pallas"]
+
+
+def paged_attention_pallas(
+    q: jax.Array,            # (B, H, hd) post-rope queries, one decode step
+    k_new: jax.Array,        # (B, Hkv, hd) new token K (post-rope)
+    v_new: jax.Array,        # (B, Hkv, hd) new token V
+    k_pool: jax.Array,       # (num_blocks, block_size, Hkv, hd) one layer
+    v_pool: jax.Array,
+    block_table: jax.Array,  # (B, W) physical block ids, sentinel == num_blocks
+    cur_len: jax.Array,      # (B,) new-token positions
+    *,
+    block_size: int,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(B, H, hd) attention outputs in the caller's query dtype.
+
+    The pool operands are READ-ONLY: the new token is fused into the
+    current block's VMEM tile inside the kernel, and persisting it to the
+    pool for the next step is the caller's scatter (see
+    ``models.attention.paged_decode_attention``).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    B, H, hd = q.shape
+    num_blocks, bs, n_kv, hd_k = k_pool.shape
+    if bs != block_size:
+        raise ValueError(f"pool block_size {bs} != block_size arg {block_size}")
+    if v_pool.shape != k_pool.shape:
+        raise ValueError(f"k/v pool shapes differ: {k_pool.shape} vs {v_pool.shape}")
+    if hd != hd_k or H % n_kv:
+        raise ValueError(
+            f"q heads/dim {(H, hd)} incompatible with pool {(n_kv, hd_k)}"
+        )
+    if k_new.shape != (B, n_kv, hd) or v_new.shape != (B, n_kv, hd):
+        raise ValueError(
+            f"new-token K/V must be {(B, n_kv, hd)}, got "
+            f"{k_new.shape} / {v_new.shape}"
+        )
+    if block_table.ndim != 2 or block_table.shape[0] != B or cur_len.shape != (B,):
+        raise ValueError(
+            f"block_table {block_table.shape} / cur_len {cur_len.shape} "
+            f"inconsistent with batch {B}"
+        )
+    out = paged_attention_kernel_call(
+        q,
+        k_new,
+        v_new,
+        k_pool,
+        v_pool,
+        block_table.astype(jnp.int32),
+        cur_len.astype(jnp.int32),
+        block_size=block_size,
+        interpret=interpret,
+    )
+    return out.astype(q.dtype)

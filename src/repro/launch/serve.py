@@ -16,7 +16,8 @@ approx_lowrank — see ``repro.serve.engine.resolve_execution_mode``);
 continuous-batching scheduler (``repro.serve.scheduler``) — slot-striped KV
 by default, or the paged block-table cache with ``--cache-layout paged``
 (``--num-blocks`` caps KV memory independently of ``--num-slots``;
-``--policy`` picks the admission order).  ``--loop`` selects the host loop
+``--policy`` picks the admission order; ``--attn-impl pallas`` swaps the
+per-layer block gather for the in-place Pallas paged-attention kernel).  ``--loop`` selects the host loop
 (async double-buffered pipeline by default; ``sync`` is the PR-3 baseline),
 and ``--prefill-decode-ratio`` / ``--prefill-token-budget`` rate-limit
 admitted prefill tokens against resident decode work so long-prompt bursts
@@ -33,7 +34,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced_config
-from repro.serve.scheduler import ADMISSION_POLICIES, CACHE_LAYOUTS, SERVE_LOOPS
+from repro.serve.scheduler import (
+    ADMISSION_POLICIES,
+    ATTN_IMPLS,
+    CACHE_LAYOUTS,
+    SERVE_LOOPS,
+)
 from repro.serve.engine import (
     EXECUTION_MODES,
     SamplingConfig,
@@ -74,6 +80,10 @@ def main(argv=None):
     ap.add_argument("--num-blocks", type=int, default=None,
                     help="paged layout: global block-pool size (default "
                          "matches the slot layout's HBM)")
+    ap.add_argument("--attn-impl", default="gather", choices=ATTN_IMPLS,
+                    help="paged layout: decode-attention path — the XLA "
+                         "block gather (oracle) or the in-place Pallas "
+                         "block-pool kernel (interpret mode off-TPU)")
     ap.add_argument("--policy", default="priority", choices=ADMISSION_POLICIES,
                     help="continuous engine: admission order")
     ap.add_argument("--loop", default="async", choices=SERVE_LOOPS,
@@ -129,6 +139,7 @@ def main(argv=None):
             num_blocks=args.num_blocks, policy=args.policy, loop=args.loop,
             prefill_decode_ratio=args.prefill_decode_ratio,
             prefill_token_budget=args.prefill_token_budget,
+            attn_impl=args.attn_impl,
         )
         sess.warmup()
         for _ in range(args.requests):
@@ -155,7 +166,8 @@ def main(argv=None):
               f"prefill stalls {st.prefill_stall_ticks}")
         if args.cache_layout == "paged":
             print(f"  KV pool: {sess.num_blocks} x {args.block_size}-row "
-                  f"blocks, peak in use {st.peak_blocks_in_use}")
+                  f"blocks, peak in use {st.peak_blocks_in_use}, "
+                  f"attention impl {st.attn_impl}")
         first = results[min(results)]
         print("sample:", first.full_sequence.tolist())
         return

@@ -22,6 +22,7 @@ from repro.models import layers as L
 
 __all__ = [
     "AttnParams",
+    "ATTN_IMPLS",
     "init_attn",
     "attention_core",
     "self_attention",
@@ -31,6 +32,11 @@ __all__ = [
 ]
 
 _NEG = -1e30
+
+# paged decode-attention implementations: the XLA clamp-gather-mask path
+# (the exact parity oracle) and the Pallas in-place block-pool kernel
+# (kernels/paged_attention; interpret mode off-TPU)
+ATTN_IMPLS = ("gather", "pallas")
 
 
 class AttnParams(NamedTuple):
@@ -228,6 +234,33 @@ def seed_kv_cache(
     )
 
 
+def _decode_qkv(
+    x: jax.Array,                 # (B, 1, d)
+    p: AttnParams,
+    cur_len: jax.Array,           # (B,) new-token positions
+    *,
+    n_heads: int,
+    n_kv: int,
+    cfg: ApproxConfig,
+    rope_theta: float,
+    use_rope: bool,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Shared decode prologue: project the new token's q/k/v through
+    ``layers.dense`` (approximate-multiplier aware) and rotate q/k at each
+    row's ``cur_len``.  ``decode_attention`` and ``paged_decode_attention``
+    differ only in how the K/V *cache* is laid out — this prologue is
+    layout-independent and deliberately single-sourced so every execution
+    mode change applies to both."""
+    B = x.shape[0]
+    hd = w_dim(p.wq, 1) // n_heads
+    q = L.dense(x, p.wq, cfg).reshape(B, 1, n_heads, hd)
+    k = L.dense(x, p.wk, cfg).reshape(B, 1, n_kv, hd)
+    v = L.dense(x, p.wv, cfg).reshape(B, 1, n_kv, hd)
+    if use_rope:
+        q, k = L.apply_rope(q, k, cur_len[:, None], theta=rope_theta)
+    return q, k, v
+
+
 def decode_attention(
     x: jax.Array,                 # (B, 1, d)
     p: AttnParams,
@@ -242,13 +275,12 @@ def decode_attention(
     use_rope: bool = True,
 ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
     """One decode step: append K/V at ``cur_len``, attend over the cache."""
-    B, _, d = x.shape
-    hd = w_dim(p.wq, 1) // n_heads
-    q = L.dense(x, p.wq, cfg).reshape(B, 1, n_heads, hd)
-    k = L.dense(x, p.wk, cfg).reshape(B, 1, n_kv, hd)
-    v = L.dense(x, p.wv, cfg).reshape(B, 1, n_kv, hd)
-    if use_rope:
-        q, k = L.apply_rope(q, k, cur_len[:, None], theta=rope_theta)
+    B = x.shape[0]
+    q, k, v = _decode_qkv(
+        x, p, cur_len, n_heads=n_heads, n_kv=n_kv, cfg=cfg,
+        rope_theta=rope_theta, use_rope=use_rope,
+    )
+    hd = q.shape[3]
     # scatter new kv at cur_len (per-batch dynamic index)
     b_idx = jnp.arange(B)
     k_cache = k_cache.at[b_idx, cur_len].set(k[:, 0].astype(k_cache.dtype))
@@ -272,9 +304,10 @@ def paged_decode_attention(
     cfg: ApproxConfig,
     rope_theta: float = 10000.0,
     use_rope: bool = True,
+    attn_impl: str = "gather",
 ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
     """``decode_attention`` against a paged KV cache: append K/V into the
-    request's current block, gather its blocks via the block table, attend.
+    request's current block, attend over its blocks via the block table.
 
     Row ``b``'s logical position ``pos`` lives at offset ``pos % block_size``
     of physical block ``block_table[b, pos // block_size]``.  The table is
@@ -286,23 +319,35 @@ def paged_decode_attention(
       blocks (or past the table) — out-of-bounds scatter updates are DROPPED
       under jit (dynamic_update_slice would CLAMP; do not swap the write
       path), so overshoot and inactive rows write nothing;
-    * the gather ``k_blocks[block_table]`` clamps sentinel entries to the
-      last real block — bounded garbage from some other request, which the
-      ``kv_len`` mask then zeroes *exactly* (its scores sit at ~-1e30, so
-      softmax assigns probability 0.0 and the AV sum is bit-identical to
-      attending over the slot layout's in-place cache).
+    * ``attn_impl="gather"`` (the parity oracle): ``k_blocks[block_table]``
+      materializes a transient (B, W*block_size, Hkv, hd) view — sentinel
+      entries clamp to the last real block, bounded garbage the ``kv_len``
+      mask zeroes *exactly* (scores at ~-1e30, softmax probability 0.0, AV
+      bit-identical to the slot layout's in-place cache);
+    * ``attn_impl="pallas"`` streams blocks from the pool straight into
+      VMEM tiles (``kernels.paged_attention``): the transient never exists
+      in HBM, sentinel blocks are skipped by predicate, and the new token
+      is fused into the current block's tile — the kernel reads the
+      *pre-scatter* pool, so attention and the persistence scatter run in
+      parallel.  Attention floats agree with the gather path to f32
+      roundoff (online vs fused softmax reduction order); greedy tokens are
+      bit-identical across serve traces (tests/test_paged.py).  That token
+      contract assumes an f32 pool: under reduced cache dtypes the gather
+      path additionally rounds its softmax *probs* to the cache dtype
+      (``attention_core``) while the kernel keeps them f32, so bf16-cache
+      parity is statistical — same discipline as the quantized modes.
 
-    The gathered (B, W*block_size, Hkv, hd) view is transient; only the
-    block pool persists.  Projections route through ``layers.dense`` exactly
-    as in ``decode_attention`` — every execution mode (incl. the Pallas
-    approx-matmul kernel) is layout-agnostic."""
-    B, _, d = x.shape
-    hd = w_dim(p.wq, 1) // n_heads
-    q = L.dense(x, p.wq, cfg).reshape(B, 1, n_heads, hd)
-    k = L.dense(x, p.wk, cfg).reshape(B, 1, n_kv, hd)
-    v = L.dense(x, p.wv, cfg).reshape(B, 1, n_kv, hd)
-    if use_rope:
-        q, k = L.apply_rope(q, k, cur_len[:, None], theta=rope_theta)
+    Projections route through ``layers.dense`` exactly as in
+    ``decode_attention`` — every execution mode (incl. the Pallas
+    approx-matmul kernel) is layout- and impl-agnostic."""
+    if attn_impl not in ATTN_IMPLS:
+        raise ValueError(f"attn_impl {attn_impl!r} not in {ATTN_IMPLS}")
+    B = x.shape[0]
+    q, k, v = _decode_qkv(
+        x, p, cur_len, n_heads=n_heads, n_kv=n_kv, cfg=cfg,
+        rope_theta=rope_theta, use_rope=use_rope,
+    )
+    hd = q.shape[3]
     num_blocks = k_blocks.shape[0]
     W = block_table.shape[1]
     blk = cur_len // block_size
@@ -311,10 +356,25 @@ def paged_decode_attention(
         block_table, jnp.minimum(blk, W - 1)[:, None], axis=1
     )[:, 0]
     phys = jnp.where(blk < W, phys, num_blocks)      # past-table -> dropped
-    k_blocks = k_blocks.at[phys, off].set(k[:, 0].astype(k_blocks.dtype))
-    v_blocks = v_blocks.at[phys, off].set(v[:, 0].astype(v_blocks.dtype))
-    kg = k_blocks[block_table].reshape(B, W * block_size, n_kv, hd)
-    vg = v_blocks[block_table].reshape(B, W * block_size, n_kv, hd)
-    out = attention_core(q, kg, vg, causal=False, kv_len=cur_len + 1, q_chunk=1)
+    new_k = k_blocks.at[phys, off].set(k[:, 0].astype(k_blocks.dtype))
+    new_v = v_blocks.at[phys, off].set(v[:, 0].astype(v_blocks.dtype))
+    if attn_impl == "pallas":
+        from repro.kernels.paged_attention import paged_attention_pallas
+
+        # pre-scatter pool operands on purpose: the kernel fuses the new
+        # token in VMEM, so the scatter above only persists it for the
+        # NEXT step and never serializes with this step's attention.  The
+        # fused token is cast to the POOL dtype first — the kernel must
+        # attend the same rounded value every later step will read back
+        out = paged_attention_pallas(
+            q[:, 0],
+            k[:, 0].astype(k_blocks.dtype), v[:, 0].astype(v_blocks.dtype),
+            k_blocks, v_blocks,
+            block_table, cur_len, block_size=block_size,
+        )[:, None]
+    else:
+        kg = new_k[block_table].reshape(B, W * block_size, n_kv, hd)
+        vg = new_v[block_table].reshape(B, W * block_size, n_kv, hd)
+        out = attention_core(q, kg, vg, causal=False, kv_len=cur_len + 1, q_chunk=1)
     out = L.dense(out.reshape(B, 1, n_heads * hd), p.wo, cfg)
-    return out, (k_blocks, v_blocks)
+    return out, (new_k, new_v)

@@ -491,12 +491,16 @@ def paged_decode_step(
     block_tables: jax.Array,            # (B, W) int32
     *,
     block_size: int,
+    attn_impl: str = "gather",
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """``decode_step`` against an ``init_paged_cache`` pytree: identical
     math, but each row's K/V reads and the new token's write are routed
     through its block table (``attention.paged_decode_attention``).  The
     table is shared across layers — block ``b`` of layer ``l`` lives at
-    ``cache["k"][l, table[row, pos // block_size]]``."""
+    ``cache["k"][l, table[row, pos // block_size]]``.  ``attn_impl``
+    selects the per-layer attention path: the XLA block gather
+    (``"gather"``, the oracle) or the in-place Pallas block-pool kernel
+    (``"pallas"``)."""
     if cfg.family in ("ssm", "hybrid"):
         raise NotImplementedError("paged decode applies to attention-family caches only")
     dtype = jnp.dtype(cfg.dtype)
@@ -518,6 +522,7 @@ def paged_decode_step(
             n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads, cfg=a,
             rope_theta=cfg.rope_theta,
             use_rope=cfg.pos_embedding in ("rope", "m_rope"),
+            attn_impl=attn_impl,
         )
         return _decode_mlp(cfg, x + h, layer, a), (kc, vc)
 

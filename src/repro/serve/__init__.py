@@ -14,6 +14,7 @@ from repro.serve.engine import (
 )
 from repro.serve.scheduler import (
     ADMISSION_POLICIES,
+    ATTN_IMPLS,
     CACHE_LAYOUTS,
     SERVE_LOOPS,
     CompletedRequest,
@@ -25,6 +26,7 @@ from repro.serve.scheduler import (
 
 __all__ = [
     "ADMISSION_POLICIES",
+    "ATTN_IMPLS",
     "CACHE_LAYOUTS",
     "SERVE_LOOPS",
     "BlockPool",

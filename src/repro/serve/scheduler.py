@@ -114,6 +114,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.models.attention import ATTN_IMPLS
 from repro.models.transformer import (
     decode_step,
     forward,
@@ -130,6 +131,7 @@ __all__ = [
     "SchedulerStats",
     "ServeSession",
     "scheduler_compile_stats",
+    "ATTN_IMPLS",
     "CACHE_LAYOUTS",
     "ADMISSION_POLICIES",
     "SERVE_LOOPS",
@@ -206,6 +208,7 @@ def _decode_tick(
     sampling: SamplingConfig,
     steps: int = 1,
     block_size: int = 0,
+    attn_impl: str = "gather",
 ):
     """``steps`` decode steps across all slots in one dispatch (decode
     chunk).  Inactive slots compute garbage into their own rows only (masked
@@ -237,7 +240,7 @@ def _decode_tick(
         else:
             logits, cache = paged_decode_step(
                 cfg, params, cache, {"tokens": last_token[:, None]}, cur_len,
-                tables, block_size=block_size,
+                tables, block_size=block_size, attn_impl=attn_impl,
             )
         # the sampled token lands at position cur_len + 1 -> unique, slot-
         # and schedule-independent key per token
@@ -258,7 +261,8 @@ def _decode_tick(
 
 
 _decode_tick_jit = _LazyJit(lambda: jax.jit(
-    _decode_tick, static_argnames=("cfg", "sampling", "steps", "block_size"),
+    _decode_tick,
+    static_argnames=("cfg", "sampling", "steps", "block_size", "attn_impl"),
     donate_argnames=_resolve_cache_donation(),
 ))
 
@@ -566,6 +570,9 @@ class SchedulerStats:
                             "wall time NOT spent blocked on the device — "
                             "the async loop's pipelining win (sync loop "
                             "reports its serial block share for contrast)",
+        "attn_impl": "paged decode-attention implementation the session's "
+                     "decode program compiled: 'gather' (XLA block gather, "
+                     "the oracle) or 'pallas' (in-place block-pool kernel)",
     }
 
     ticks: int = 0
@@ -586,6 +593,7 @@ class SchedulerStats:
     max_decode_gap_ticks: int = 0
     host_block_s: float = 0.0
     wall_s: float = 0.0
+    attn_impl: str = "gather"
 
     @property
     def slot_utilization(self) -> float:
@@ -680,7 +688,10 @@ class ServeSession:
     previous one's tokens, keeping the decode carry device-resident; pass
     ``loop="sync"`` for the PR-3 strictly-alternating loop (the parity
     baseline ``benchmarks/serve_async.py`` measures against).
-    ``prefill_decode_ratio`` / ``prefill_token_budget`` bound the bucketed
+    ``attn_impl`` selects the paged decode-attention path: ``"gather"``
+    (XLA clamp-gather-mask, the exact oracle) or ``"pallas"`` (the
+    ``kernels.paged_attention`` in-place block-pool kernel; interpret mode
+    off-TPU).  ``prefill_decode_ratio`` / ``prefill_token_budget`` bound the bucketed
     prompt tokens each ``step()`` may admit while decodes are resident
     (``ratio * n_active * steps_per_tick`` resp. a flat budget), so a burst
     of long prompts spreads over several steps instead of stalling every
@@ -708,6 +719,7 @@ class ServeSession:
         loop: str = "async",
         prefill_decode_ratio: Optional[float] = None,
         prefill_token_budget: Optional[int] = None,
+        attn_impl: str = "gather",
     ):
         if not cfg.embed_input:
             raise ValueError(f"{cfg.name}: token serving requires an embed-input arch")
@@ -717,6 +729,13 @@ class ServeSession:
             raise ValueError(f"policy {policy!r} not in {ADMISSION_POLICIES}")
         if loop not in SERVE_LOOPS:
             raise ValueError(f"loop {loop!r} not in {SERVE_LOOPS}")
+        if attn_impl not in ATTN_IMPLS:
+            raise ValueError(f"attn_impl {attn_impl!r} not in {ATTN_IMPLS}")
+        if attn_impl != "gather" and cache_layout != "paged":
+            raise ValueError(
+                f"attn_impl {attn_impl!r} requires cache_layout='paged' — "
+                "the slot layout has no block table to walk"
+            )
         if prefill_decode_ratio is not None and prefill_token_budget is not None:
             raise ValueError(
                 "prefill_decode_ratio and prefill_token_budget are alternative "
@@ -737,6 +756,7 @@ class ServeSession:
         self.layout = cache_layout
         self.policy = policy
         self.loop = loop
+        self.attn_impl = attn_impl
         self.prefill_decode_ratio = prefill_decode_ratio
         self.prefill_token_budget = prefill_token_budget
         self.buckets = C.PromptBuckets(prompt_buckets)
@@ -805,7 +825,7 @@ class ServeSession:
         self._seq = 0
         self._next_id = 0
         self.clock = 0
-        self.stats = SchedulerStats()
+        self.stats = SchedulerStats(attn_impl=attn_impl)
         self._completed: Dict[int, CompletedRequest] = {}
         self._just_finished: List[int] = []     # drained by each step()
         # -- async pipeline state --------------------------------------------
@@ -1296,6 +1316,7 @@ class ServeSession:
             last_token=self._last_token, cur_len=self._cur_len,
             active=active, slot_keys=self._slot_keys, tables=tables,
             sampling=self.sampling, steps=steps, block_size=block_size,
+            attn_impl=self.attn_impl,
         )
         tb = time.perf_counter()
         toks = np.asarray(toks)                  # (steps, N)
@@ -1357,6 +1378,7 @@ class ServeSession:
                 last_token=self._lt_dev, cur_len=self._cur_len.copy(),
                 active=active, slot_keys=self._sk_dev, tables=tables,
                 sampling=self.sampling, steps=steps, block_size=block_size,
+                attn_impl=self.attn_impl,
             )
             self.clock += steps
             self.stats.ticks += steps
@@ -1508,6 +1530,7 @@ class ServeSession:
             tables=self._tables.copy() if self.layout == "paged" else None,
             sampling=self.sampling, steps=self.steps_per_tick,
             block_size=self.block_size if self.layout == "paged" else 0,
+            attn_impl=self.attn_impl,
         )
         jax.block_until_ready(out)
         self.cache = out[0]

@@ -1,11 +1,16 @@
-"""Property-based differential tests: ``approx_matmul_pallas`` must be
-bit-exact to the ``mul8x8_table`` LUT oracle on EVERY shape, not just the
-hand-picked ones in test_kernels.py.
+"""Property-based differential tests for the Pallas kernel families.
+
+* ``approx_matmul_pallas`` must be bit-exact to the ``mul8x8_table`` LUT
+  oracle on EVERY shape, not just the hand-picked ones in test_kernels.py;
+* ``paged_attention_pallas`` (the paged decode-attention kernel) must match
+  its pure-JAX exact-softmax oracle ``paged_attention_ref`` to f32 roundoff
+  on random block-table layouts — sentinel-padded rows, sentinel holes,
+  off-boundary and past-table ``cur_len``, GQA ``Hkv < n_heads``.
 
 Runs through ``_hypothesis_compat``: real ``hypothesis`` when installed,
 otherwise a deterministic seeded fallback with the same assertions.
 
-Coverage axes:
+approx-matmul coverage axes:
 * random M/N/K including odd / prime / non-multiple-of-block sizes;
 * leading batch dimensions on the lhs (1 and 2 extra dims);
 * every kernel-supported multiplier (the aggregated designs with a low-rank
@@ -13,8 +18,8 @@ Coverage axes:
   so the kernel rejects them, pinned below);
 * pruned operand ranges (the paper's co-optimized (0,31) bands).
 
-Marked ``slow``: each example pads to >= (8, 128) x (128, 128) interpret-mode
-kernel work; CI runs these in the second-tier job.
+Marked ``slow``: each example runs interpret-mode kernel work; CI runs
+these in the second-tier job under ``REPRO_FORCE_INTERPRET=1``.
 """
 import jax.numpy as jnp
 import numpy as np
@@ -24,6 +29,10 @@ from _hypothesis_compat import given, settings, strategies as st
 from repro.core import multipliers as M
 from repro.kernels.approx_matmul.ops import approx_matmul_pallas, select_blocks
 from repro.kernels.approx_matmul.ref import approx_matmul_ref
+from repro.kernels.paged_attention import (
+    paged_attention_pallas,
+    paged_attention_ref,
+)
 
 pytestmark = pytest.mark.slow
 
@@ -139,3 +148,112 @@ def test_select_blocks_invariants(m, n, k, seed):
     assert bm_ <= 128 and bn_ <= 128 and bk_ <= 256
     # padding is tight: strictly less than one block of waste
     assert mp - m < bm_ and np_ - n < bn_ and kp - k < bk_
+
+
+# ---------------------------------------------------------------------------
+# Paged decode-attention kernel vs the pure-JAX oracle
+# ---------------------------------------------------------------------------
+
+
+def _paged_case(rng, B, W, bs, n_kv, g, hd, *, holes=False):
+    """Random paged decode-attention inputs: each row holds a random number
+    of distinct blocks (possibly zero — an inactive all-sentinel row), its
+    ``cur_len`` lands anywhere in the last allocated block (including offset
+    0, the fresh-boundary case), and with ``holes`` an allocated middle
+    block is knocked back to the sentinel — the predicate-skip case the
+    clamp-gather path never sees."""
+    H = n_kv * g
+    num_blocks = B * W + 1                       # at least one spare block
+    q = jnp.asarray(rng.normal(size=(B, H, hd)), jnp.float32)
+    kn = jnp.asarray(rng.normal(size=(B, n_kv, hd)), jnp.float32)
+    vn = jnp.asarray(rng.normal(size=(B, n_kv, hd)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(num_blocks, bs, n_kv, hd)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(num_blocks, bs, n_kv, hd)), jnp.float32)
+    tbl = np.full((B, W), num_blocks, np.int32)
+    cur = np.zeros((B,), np.int32)
+    free = list(rng.permutation(num_blocks))
+    for b in range(B):
+        n_alloc = int(rng.integers(0, W + 1))
+        tbl[b, :n_alloc] = [free.pop() for _ in range(n_alloc)]
+        if n_alloc:
+            cur[b] = int(rng.integers((n_alloc - 1) * bs, n_alloc * bs))
+            if holes and n_alloc > 1:
+                tbl[b, int(rng.integers(0, n_alloc - 1))] = num_blocks
+        else:
+            cur[b] = int(rng.integers(0, W * bs))   # inactive row
+    return q, kn, vn, kp, vp, jnp.asarray(tbl), jnp.asarray(cur)
+
+
+def _check_paged(args, bs):
+    out = np.asarray(paged_attention_pallas(*args, block_size=bs))
+    ref = np.asarray(paged_attention_ref(*args, block_size=bs))
+    assert out.shape == ref.shape
+    # online vs fused softmax reorders the f32 sums: roundoff, not bitwise
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    st.integers(1, 4),                       # B
+    st.integers(1, 4),                       # W (table width)
+    st.sampled_from([1, 2, 4, 8]),           # block_size
+    st.integers(1, 2),                       # Hkv
+    st.integers(1, 3),                       # GQA group (H = Hkv * g)
+    st.sampled_from([4, 16]),                # head_dim
+    st.integers(0, 2**31 - 1),               # data seed
+)
+def test_paged_attention_matches_ref_random_tables(B, W, bs, n_kv, g, hd, seed):
+    rng = np.random.default_rng(seed)
+    _check_paged(_paged_case(rng, B, W, bs, n_kv, g, hd), bs)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    st.integers(2, 4),                       # B
+    st.integers(2, 4),                       # W
+    st.sampled_from([2, 4]),                 # block_size
+    st.integers(1, 3),                       # GQA group
+    st.integers(0, 2**31 - 1),
+)
+def test_paged_attention_skips_sentinel_holes(B, W, bs, g, seed):
+    """Sentinel entries BELOW cur_len (never produced by the scheduler, but
+    exactly what the kernel's predicate-skip must handle): both kernel and
+    oracle must exclude those positions entirely."""
+    rng = np.random.default_rng(seed)
+    _check_paged(_paged_case(rng, B, W, bs, 2, g, 8, holes=True), bs)
+
+
+def test_paged_attention_inactive_rows_are_exact_zero():
+    """All-sentinel rows (empty decode slots) flush exactly 0.0 — no NaNs
+    from the 0/0 normalizer, no garbage from the clamped DMA."""
+    rng = np.random.default_rng(0)
+    q, kn, vn, kp, vp, tbl, cur = _paged_case(rng, 3, 2, 4, 2, 2, 8)
+    tbl = jnp.full_like(tbl, kp.shape[0])    # every row inactive
+    out = np.asarray(paged_attention_pallas(q, kn, vn, kp, vp, tbl, cur, block_size=4))
+    assert np.array_equal(out, np.zeros_like(out))
+
+
+def test_paged_attention_past_table_cur_len():
+    """Overshoot rows (cur_len beyond the table, the scheduler's discarded
+    garbage regime) still produce finite outputs that agree with the
+    oracle: the fused append simply never lands."""
+    rng = np.random.default_rng(1)
+    q, kn, vn, kp, vp, tbl, cur = _paged_case(rng, 2, 2, 4, 1, 2, 8)
+    cur = jnp.asarray([2 * 4 + 3, 2 * 4], jnp.int32)    # both past the table
+    args = (q, kn, vn, kp, vp, tbl, cur)
+    _check_paged(args, 4)
+    assert np.isfinite(np.asarray(paged_attention_pallas(*args, block_size=4))).all()
+
+
+def test_paged_attention_ops_validation():
+    """Shape mistakes fail loudly in the wrapper, not deep in pallas."""
+    rng = np.random.default_rng(0)
+    q, kn, vn, kp, vp, tbl, cur = _paged_case(rng, 2, 2, 4, 2, 2, 8)
+    with pytest.raises(ValueError, match="block_size"):
+        paged_attention_pallas(q, kn, vn, kp, vp, tbl, cur, block_size=8)
+    with pytest.raises(ValueError, match="new-token"):
+        paged_attention_pallas(q, kn[:1], vn, kp, vp, tbl, cur, block_size=4)
+    with pytest.raises(ValueError, match="batch"):
+        paged_attention_pallas(q, kn, vn, kp, vp, tbl[:1], cur, block_size=4)
+    with pytest.raises(ValueError, match="incompatible"):
+        paged_attention_pallas(q[:, :3], kn, vn, kp, vp, tbl, cur, block_size=4)
