@@ -1,0 +1,277 @@
+"""Prefix sharing + preemption vs the reservation-based paged oracle at an
+EQUAL block-pool size.
+
+Both arms serve the same trace — 80% of requests open with a shared
+system prompt (the production shape sharing exists for), 20% are unique —
+through ``repro.serve.scheduler.ServeSession`` with identical buckets,
+decode chunking, pool size, and greedy sampling.  The only difference:
+
+* **baseline** — PR-3 semantics: every prompt block is written privately
+  and admission reserves the request's worst-case block count up front,
+  so the pool serializes long-budget requests no matter how much of
+  their prompts is identical;
+* **shared** — ``prefix_sharing=True, preemption=True``: shared prompt
+  blocks map to the same physical blocks (prefill writes for the shared
+  span are skipped), partial tails fork copy-on-write on first write,
+  and admission oversubscribes the pool — on exhaustion the
+  least-important resident is evicted and replayed bit-identically.
+
+The JSON artifact (``BENCH_serve_prefix.json``) records per-arm peak
+concurrency and tokens/s, the sharing counters (prefix-hit blocks, CoW
+forks, preemptions), the concurrency ratio at equal ``num_blocks`` (the
+headline: >= 1.5x on the default config), a forced-preemption
+sub-scenario (a pool too small for two worst cases; the evicted request's
+tokens must equal a roomy-pool run), the cross-arm token-mismatch count
+(must be 0 — asserted, not sampled), the recompile count across the
+timed passes (must be 0), and ``SchedulerStats.DOCS`` under
+``field_docs`` so every metric key is self-describing.
+
+    PYTHONPATH=src python benchmarks/serve_prefix.py
+    PYTHONPATH=src python benchmarks/serve_prefix.py --smoke --out /tmp/b.json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import numpy as np
+
+BUCKETS = (8, 16, 32, 64)
+SHARED_LEN = 24          # system-prompt tokens: 3 full blocks at block 8
+NEW_CHOICES = (4, 8, 8, 16, 24)
+MAX_LEN = 96
+BLOCK_SIZE = 8
+
+
+def _tiny_cfg(exec_mode: str = "exact"):
+    from repro.configs import get_config, reduced_config
+    from repro.serve.engine import resolve_execution_mode
+
+    return dataclasses.replace(
+        reduced_config(get_config("granite-3-2b")),
+        num_layers=4, d_model=256, num_heads=4, num_kv_heads=2, head_dim=64,
+        d_ff=512, vocab_size=1024, remat=False, q_chunk=64, dtype="float32",
+        approx=resolve_execution_mode(exec_mode),
+    )
+
+
+def build_trace(n: int, vocab: int, seed: int = 0, rate: float = 1.0,
+                shared_frac: float = 0.8):
+    """[(prompt, max_new, arrival_tick)] — ``shared_frac`` of the requests
+    open with the same ``SHARED_LEN``-token system prompt plus a short
+    unique suffix; the rest are fully unique."""
+    rng = np.random.default_rng(seed)
+    system = rng.integers(0, vocab, SHARED_LEN).astype(np.int32)
+    trace, t = [], 0
+    while len(trace) < n:
+        t += int(rng.poisson(rate))
+        tail = rng.integers(0, vocab, int(rng.integers(2, 7))).astype(np.int32)
+        if rng.random() < shared_frac:
+            prompt = np.concatenate([system, tail])
+            # a slice of the shared traffic is same-tick duplicate pairs
+            # (best-of-n fan-out): identical prompts resident together
+            # share the partial tail block, so the first decode write
+            # must fork it copy-on-write
+            if rng.random() < 0.2:
+                trace.append((
+                    prompt, int(NEW_CHOICES[rng.integers(len(NEW_CHOICES))]), t,
+                ))
+        else:
+            prompt = rng.integers(0, vocab,
+                                  SHARED_LEN + tail.size).astype(np.int32)
+        trace.append((prompt, int(NEW_CHOICES[rng.integers(len(NEW_CHOICES))]), t))
+    return trace[:n]
+
+
+def run_arm(cfg, params, trace, *, sharing: bool, num_slots: int,
+            num_blocks: int, steps_per_tick: int = 4):
+    """Warm pass (compiles every program incl. copy_block), then a timed
+    fresh-session pass.  Returns (tok/s, results, stats, recompiles, s)."""
+    from repro.serve.scheduler import ServeSession, scheduler_compile_stats
+
+    def serve():
+        sess = ServeSession(
+            cfg, params, num_slots=num_slots, max_len=MAX_LEN,
+            prompt_buckets=BUCKETS, steps_per_tick=steps_per_tick,
+            cache_layout="paged", block_size=BLOCK_SIZE,
+            num_blocks=num_blocks, prefix_sharing=sharing,
+            preemption=sharing,
+        )
+        for p, n, t in trace:
+            sess.submit(p, max_new=n, arrival=t)
+        sess.run()
+        return sess
+
+    warm = serve()
+    warm.warmup()                            # any program the trace missed
+    before = scheduler_compile_stats()
+    t0 = time.perf_counter()
+    sess = serve()
+    dt = time.perf_counter() - t0
+    recompiles = sum(scheduler_compile_stats().values()) - sum(before.values())
+    useful = sum(len(r.tokens) for r in sess.results.values())
+    return useful / dt, sess.results, sess.stats, recompiles, dt
+
+
+def forced_preemption_scenario(cfg, params):
+    """A pool too small for two worst cases: admission oversubscribes, one
+    resident is evicted mid-decode and replayed.  Returns the preemption
+    count and the mismatch count vs a roomy-pool (never-preempting) run."""
+    from repro.serve.scheduler import ServeSession
+
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+               for _ in range(2)]
+    outs = {}
+    stats = {}
+    for blocks in (24, 5):                   # roomy oracle vs starved pool
+        sess = ServeSession(
+            cfg, params, num_slots=2, max_len=64, prompt_buckets=(8, 32),
+            cache_layout="paged", block_size=4, num_blocks=blocks,
+            prefix_sharing=True, preemption=True,
+        )
+        ids = [sess.submit(p, max_new=12, req_id=i)
+               for i, p in enumerate(prompts)]
+        res = sess.run(max_steps=10_000)
+        outs[blocks] = {i: res[i].tokens.tolist() for i in ids}
+        stats[blocks] = sess.stats
+    mism = sum(outs[24][i] != outs[5][i] for i in outs[24])
+    return stats[5].preemptions, mism
+
+
+def bench(exec_mode: str = "exact", requests: int = 48, num_slots: int = 8,
+          num_blocks: int = 24, seed: int = 0, steps_per_tick: int = 4,
+          shared_frac: float = 0.8):
+    from repro.models.transformer import init_params
+    from repro.serve.scheduler import SchedulerStats
+
+    cfg = _tiny_cfg(exec_mode)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    trace = build_trace(requests, cfg.vocab_size, seed=seed,
+                        shared_frac=shared_frac)
+
+    base_tps, base_res, base_st, base_rc, base_dt = run_arm(
+        cfg, params, trace, sharing=False, num_slots=num_slots,
+        num_blocks=num_blocks, steps_per_tick=steps_per_tick,
+    )
+    shared_tps, shared_res, shared_st, shared_rc, shared_dt = run_arm(
+        cfg, params, trace, sharing=True, num_slots=num_slots,
+        num_blocks=num_blocks, steps_per_tick=steps_per_tick,
+    )
+
+    # cross-arm parity oracle: same trace, bit-identical greedy tokens
+    mismatches = sum(
+        not np.array_equal(base_res[rid].tokens, shared_res[rid].tokens)
+        for rid in base_res
+    )
+    preemptions, preempt_mism = forced_preemption_scenario(cfg, params)
+    useful = sum(len(r.tokens) for r in base_res.values())
+    return {
+        "bench": "serve_prefix",
+        "exec_mode": exec_mode,
+        "requests": requests,
+        "seed": seed,
+        "steps_per_tick": steps_per_tick,
+        "shared_frac": shared_frac,
+        "shared_prompt_len": SHARED_LEN,
+        "prompt_buckets": list(BUCKETS),
+        "max_new_choices": list(NEW_CHOICES),
+        "max_len": MAX_LEN,
+        "block_size": BLOCK_SIZE,
+        "num_slots": num_slots,
+        "num_blocks": num_blocks,
+        "useful_tokens": useful,
+        "baseline_tok_s": round(base_tps, 1),
+        "shared_tok_s": round(shared_tps, 1),
+        "speedup": round(shared_tps / base_tps, 3),
+        "baseline_peak_concurrent": base_st.peak_active,
+        "shared_peak_concurrent": shared_st.peak_active,
+        "concurrency_ratio": round(
+            shared_st.peak_active / base_st.peak_active, 3),
+        "baseline_peak_blocks": base_st.peak_blocks_in_use,
+        "shared_peak_blocks": shared_st.peak_blocks_in_use,
+        "prefix_hit_blocks": shared_st.prefix_hit_blocks,
+        "cow_forks": shared_st.cow_forks,
+        "preemptions": shared_st.preemptions,
+        "forced_preemptions": preemptions,
+        "forced_preemption_mismatches": preempt_mism,
+        "baseline_latency_p50": base_st.latency_p50,
+        "baseline_latency_p95": base_st.latency_p95,
+        "shared_latency_p50": shared_st.latency_p50,
+        "shared_latency_p95": shared_st.latency_p95,
+        "token_mismatches": mismatches,
+        "recompiles_after_warmup": base_rc + shared_rc,
+        "baseline_s": round(base_dt, 4),
+        "shared_s": round(shared_dt, 4),
+        "field_docs": dict(SchedulerStats.DOCS),
+    }
+
+
+def run(exec_mode: str = "exact", requests: int = 48):
+    """benchmarks/run.py entry: (name, us_per_call, derived) rows."""
+    r = bench(exec_mode=exec_mode, requests=requests)
+    return [
+        (f"serve/prefix_shared_{exec_mode}", 1e6 / r["shared_tok_s"],
+         f"{r['shared_tok_s']} tok/s peak={r['shared_peak_concurrent']} req "
+         f"hits={r['prefix_hit_blocks']}"),
+        (f"serve/prefix_baseline_{exec_mode}", 1e6 / r["baseline_tok_s"],
+         f"{r['baseline_tok_s']} tok/s peak={r['baseline_peak_concurrent']} req"),
+        (f"serve/prefix_concurrency_{exec_mode}", 0.0,
+         f"{r['concurrency_ratio']}x at {r['num_blocks']} blocks, "
+         f"mismatches={r['token_mismatches']}, "
+         f"preemptions={r['preemptions']}+{r['forced_preemptions']}"),
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--exec", dest="exec_mode", default="exact",
+                    choices=("exact", "exact_quant", "approx", "approx_lowrank"))
+    ap.add_argument("--requests", type=int, default=48)
+    ap.add_argument("--num-slots", type=int, default=8)
+    ap.add_argument("--num-blocks", type=int, default=24,
+                    help="block-pool size for BOTH arms (the equal-memory "
+                         "knob: baseline reserves worst cases against it, "
+                         "sharing packs actual shared context into it)")
+    ap.add_argument("--shared-frac", type=float, default=0.8)
+    ap.add_argument("--steps", type=int, default=4,
+                    help="decode-chunk size (steps per dispatch)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="miniature config: exercises every oracle without "
+                         "the full trace (CI gate for the harness itself)")
+    ap.add_argument("--out", default="BENCH_serve_prefix.json")
+    args = ap.parse_args()
+    if args.smoke:
+        args.requests = min(args.requests, 14)
+    r = bench(exec_mode=args.exec_mode, requests=args.requests,
+              num_slots=args.num_slots, num_blocks=args.num_blocks,
+              seed=args.seed, steps_per_tick=args.steps,
+              shared_frac=args.shared_frac)
+    with open(args.out, "w") as f:
+        json.dump(r, f, indent=2)
+        f.write("\n")
+    print(json.dumps({k: v for k, v in r.items() if k != "field_docs"},
+                     indent=2))
+    failures = []
+    if r["token_mismatches"]:
+        failures.append(f"{r['token_mismatches']} requests differ between arms")
+    if r["forced_preemption_mismatches"] or not r["forced_preemptions"]:
+        failures.append(
+            f"forced-preemption scenario: {r['forced_preemptions']} "
+            f"preemptions, {r['forced_preemption_mismatches']} mismatches")
+    if r["recompiles_after_warmup"]:
+        failures.append(f"{r['recompiles_after_warmup']} recompiles after warmup")
+    if not args.smoke and r["concurrency_ratio"] < 1.5:
+        failures.append(f"concurrency {r['concurrency_ratio']}x < 1.5x at "
+                        f"equal num_blocks")
+    for msg in failures:
+        print(f"FAIL: {msg}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -21,7 +21,11 @@ per-layer block gather for the in-place Pallas paged-attention kernel).  ``--loo
 (async double-buffered pipeline by default; ``sync`` is the PR-3 baseline),
 and ``--prefill-decode-ratio`` / ``--prefill-token-budget`` rate-limit
 admitted prefill tokens against resident decode work so long-prompt bursts
-cannot starve active decodes (see docs/serving.md).
+cannot starve active decodes (see docs/serving.md).  ``--prefix-sharing``
+turns on refcounted copy-on-write prefix sharing over the block pool and
+``--preemption`` replaces the worst-case block reservation with
+oversubscription + evict-and-replay; ``--pad-id`` sets the model's real pad
+token for bucketed prefill rows.
 """
 from __future__ import annotations
 
@@ -84,6 +88,18 @@ def main(argv=None):
                     help="paged layout: decode-attention path — the XLA "
                          "block gather (oracle) or the in-place Pallas "
                          "block-pool kernel (interpret mode off-TPU)")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="paged layout: refcounted copy-on-write prefix "
+                         "sharing — requests whose prompts share leading "
+                         "blocks map them to the same physical blocks")
+    ap.add_argument("--preemption", action="store_true",
+                    help="paged layout: drop the worst-case block "
+                         "reservation and oversubscribe the pool; on "
+                         "exhaustion the least-important resident request "
+                         "is evicted and replayed (bit-identical)")
+    ap.add_argument("--pad-id", type=int, default=0,
+                    help="continuous engine: pad token id for bucketed "
+                         "prefill rows (the model's real pad token)")
     ap.add_argument("--policy", default="priority", choices=ADMISSION_POLICIES,
                     help="continuous engine: admission order")
     ap.add_argument("--loop", default="async", choices=SERVE_LOOPS,
@@ -125,9 +141,14 @@ def main(argv=None):
         from repro.serve.scheduler import ServeSession
 
         rng = np.random.default_rng(0)
-        # bucket set covers --prompt-len; cache covers the longest request
+        # bucket set covers --prompt-len; cache covers the longest request.
+        # Preemption replays prompt + accepted tokens through prefill, so
+        # the buckets must also cover the longest possible replay prompt.
+        top = args.prompt_len
+        if args.preemption:
+            top = args.prompt_len + args.new - 1
         buckets = [8]
-        while buckets[-1] < args.prompt_len:
+        while buckets[-1] < top:
             buckets.append(buckets[-1] * 2)
         max_len = max(args.max_len, buckets[-1] + args.new)
         if args.cache_layout == "paged" and max_len % args.block_size:
@@ -139,7 +160,8 @@ def main(argv=None):
             num_blocks=args.num_blocks, policy=args.policy, loop=args.loop,
             prefill_decode_ratio=args.prefill_decode_ratio,
             prefill_token_budget=args.prefill_token_budget,
-            attn_impl=args.attn_impl,
+            attn_impl=args.attn_impl, pad_id=args.pad_id,
+            prefix_sharing=args.prefix_sharing, preemption=args.preemption,
         )
         sess.warmup()
         for _ in range(args.requests):
@@ -168,6 +190,10 @@ def main(argv=None):
             print(f"  KV pool: {sess.num_blocks} x {args.block_size}-row "
                   f"blocks, peak in use {st.peak_blocks_in_use}, "
                   f"attention impl {st.attn_impl}")
+            if args.prefix_sharing or args.preemption:
+                print(f"  sharing: {st.prefix_hit_blocks} prefix-hit blocks, "
+                      f"{st.cow_forks} CoW forks, "
+                      f"{st.preemptions} preemptions")
         first = results[min(results)]
         print("sample:", first.full_sequence.tolist())
         return

@@ -313,7 +313,14 @@ def paged_decode_attention(
     of physical block ``block_table[b, pos // block_size]``.  The table is
     fixed-width (``W = max_len // block_size``) with unallocated entries set
     to the sentinel ``num_blocks``, so ONE compiled program serves any
-    context layout; table *contents* are traced data.
+    context layout; table *contents* are traced data.  That content-
+    agnosticism is what makes the scheduler's copy-on-write prefix sharing
+    free at this layer: several rows' tables may point at the SAME physical
+    block (a shared prompt prefix) and both impls below just walk them —
+    neither reads which request owns a block, and the scheduler guarantees a
+    shared block is never written while shared (writes fork first), so no
+    read-path change is needed (pinned by tests/test_prefix_sharing.py
+    under both impls).
 
     * the append scatter targets the sentinel for rows past their allocated
       blocks (or past the table) — out-of-bounds scatter updates are DROPPED

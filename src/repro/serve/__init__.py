@@ -1,6 +1,7 @@
 """Serving: scan-based batched engine (PR 1) + continuous-batching
-scheduler over a slot-based (PR 2) or paged block-table (PR 3) KV cache."""
-from repro.serve.cache import BlockPool, PromptBuckets, SlotPool
+scheduler over a slot-based (PR 2) or paged block-table (PR 3) KV cache
+with copy-on-write prefix sharing and preemption (PR 6)."""
+from repro.serve.cache import BlockPool, PrefixCache, PromptBuckets, SlotPool
 from repro.serve.engine import (
     EXECUTION_MODES,
     GenerationState,
@@ -30,6 +31,7 @@ __all__ = [
     "CACHE_LAYOUTS",
     "SERVE_LOOPS",
     "BlockPool",
+    "PrefixCache",
     "PromptBuckets",
     "SlotPool",
     "EXECUTION_MODES",

@@ -50,6 +50,7 @@ from __future__ import annotations
 
 import bisect
 import heapq
+from collections import OrderedDict
 from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
@@ -61,12 +62,14 @@ __all__ = [
     "insert_prefill_kv",
     "scatter_rows",
     "scatter_prompt_blocks",
+    "copy_block",
     "merge_admit_carry",
     "evict_slot",
     "slot_view",
     "PromptBuckets",
     "SlotPool",
     "BlockPool",
+    "PrefixCache",
 ]
 
 
@@ -213,6 +216,20 @@ def scatter_prompt_blocks(
     return dict(cache, k=write(cache["k"], k), v=write(cache["v"], v))
 
 
+def copy_block(cache: Any, src: jax.Array, dst: jax.Array) -> Any:
+    """Copy one physical block's K/V rows from block ``src`` to block ``dst``
+    — the copy-on-write fork primitive.  Both indices are *traced* scalars,
+    so ONE compiled program forks any (src, dst) pair; ``dst`` is always a
+    freshly acquired (valid) block id, so the clamping semantics of
+    ``dynamic_update_slice`` never engage."""
+
+    def cp(full):
+        row = jax.lax.dynamic_slice_in_dim(full, src, 1, axis=1)
+        return jax.lax.dynamic_update_slice_in_dim(full, row, dst, axis=1)
+
+    return dict(cache, k=cp(cache["k"]), v=cp(cache["v"]))
+
+
 # ---------------------------------------------------------------------------
 # Host-side bookkeeping
 # ---------------------------------------------------------------------------
@@ -299,7 +316,21 @@ class _IdPool:
         heapq.heappush(self._heap, i)
         self._free_set.add(i)
 
+    def _validate_release_many(self, ids: Sequence[int]) -> None:
+        seen: set = set()
+        for i in ids:
+            if not 0 <= i < self._count:
+                raise ValueError(f"{self._what} {i} out of range")
+            if i in self._free_set or i in seen:
+                raise ValueError(f"{self._what} {i} double-released")
+            seen.add(i)
+
     def release_many(self, ids: Sequence[int]) -> None:
+        """Atomic batch release: the whole batch is validated before any id
+        mutates the pool, so a double-free/out-of-range id raises with
+        ``free_count`` (and every invariant a caller might roll back against)
+        untouched."""
+        self._validate_release_many(ids)
         for i in ids:
             self.release(i)
 
@@ -316,19 +347,147 @@ class SlotPool(_IdPool):
 
 
 class BlockPool(_IdPool):
-    """Free list over ``num_blocks`` physical KV blocks — the paged layout's
-    global memory allocator.  A block is exclusively owned by one request
-    from ``acquire`` to ``release``; the host-side block table maps a
-    request's logical block slots to its physical blocks, and the sentinel id
-    ``num_blocks`` marks unallocated table entries (device writes there are
-    dropped)."""
+    """Refcounted free list over ``num_blocks`` physical KV blocks — the
+    paged layout's global memory allocator.
+
+    ``acquire`` hands out a block with refcount 1; ``share`` takes an extra
+    reference on a live block (prefix sharing: several requests' block tables
+    — plus the scheduler's prefix cache — point at the same physical block);
+    ``release`` drops one reference and only returns the block to the free
+    heap when the count hits zero.  ``free_count`` / ``busy_count`` keep
+    counting *physical* blocks, so capacity math is unchanged.  The host-side
+    block table maps a request's logical block slots to its physical blocks,
+    and the sentinel id ``num_blocks`` marks unallocated table entries
+    (device writes there are dropped)."""
 
     _what = "block"
 
     def __init__(self, num_blocks: int):
         super().__init__(num_blocks)
         self.num_blocks = num_blocks
+        self._ref: List[int] = [0] * num_blocks
 
     @property
     def sentinel(self) -> int:
         return self.num_blocks
+
+    def refcount(self, i: int) -> int:
+        if not 0 <= i < self._count:
+            raise ValueError(f"block {i} out of range")
+        return self._ref[i]
+
+    def acquire(self) -> Optional[int]:
+        i = super().acquire()
+        if i is not None:
+            self._ref[i] = 1
+        return i
+
+    def share(self, i: int) -> int:
+        """Take one extra reference on a live block; returns the new count."""
+        if not 0 <= i < self._count:
+            raise ValueError(f"block {i} out of range")
+        if self._ref[i] < 1:
+            raise ValueError(f"block {i} is free; cannot share")
+        self._ref[i] += 1
+        return self._ref[i]
+
+    def release(self, i: int) -> None:
+        if not 0 <= i < self._count:
+            raise ValueError(f"block {i} out of range")
+        if self._ref[i] < 1:
+            raise ValueError(f"block {i} double-released")
+        self._ref[i] -= 1
+        if self._ref[i] == 0:
+            heapq.heappush(self._heap, i)
+            self._free_set.add(i)
+
+    def _validate_release_many(self, ids: Sequence[int]) -> None:
+        # Atomicity with refcounts: each id may appear up to refcount(i)
+        # times in one batch, so validate per-id multiplicity, not set
+        # membership.
+        mult: dict = {}
+        for i in ids:
+            if not 0 <= i < self._count:
+                raise ValueError(f"block {i} out of range")
+            mult[i] = mult.get(i, 0) + 1
+        for i, n in mult.items():
+            if n > self._ref[i]:
+                raise ValueError(
+                    f"block {i}: batch releases {n} refs but only "
+                    f"{self._ref[i]} held"
+                )
+
+
+class PrefixCache:
+    """Host-side map from prompt-prefix content to the physical block that
+    already holds its K/V, enabling copy-on-write prefix sharing.
+
+    Keys are *structural rolling keys*: the key for block ``j`` of a prompt
+    is ``intern((key of block j-1, tokens in block j))`` with ``ROOT`` (-1)
+    as the zeroth parent — a collision-free stand-in for a rolling hash over
+    the token ids (interning compares exact token tuples, so two prefixes
+    share a key iff their token contents are identical).  Keys are content-
+    bound, not block-bound, so chains self-heal across eviction: evicting a
+    mid-chain entry only un-publishes that block; re-inserting the same
+    content later re-uses the same key id.
+
+    The cache itself never touches the :class:`BlockPool` — the scheduler
+    takes one pool reference per published block (the cache's +1) and drops
+    it on eviction, keeping all refcount traffic in one place.  Entries are
+    kept in LRU order; ``lru_blocks`` exposes eviction candidates for
+    reclaim-under-pressure."""
+
+    ROOT = -1
+
+    def __init__(self) -> None:
+        self._intern: dict = {}           # (parent_key, tokens) -> key_id
+        self._entries: "OrderedDict[int, int]" = OrderedDict()  # key -> block
+        self._by_block: dict = {}         # block -> key_id
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def key(self, parent: int, tokens: Sequence[int]) -> int:
+        """Intern the rolling key for a block holding ``tokens`` whose
+        predecessor block has key ``parent`` (``ROOT`` for block 0)."""
+        k = (int(parent), tuple(int(t) for t in tokens))
+        kid = self._intern.get(k)
+        if kid is None:
+            kid = len(self._intern)
+            self._intern[k] = kid
+        return kid
+
+    def lookup(self, key_id: int) -> Optional[int]:
+        """Physical block published under ``key_id`` (-> MRU), else None."""
+        blk = self._entries.get(key_id)
+        if blk is not None:
+            self._entries.move_to_end(key_id)
+        return blk
+
+    def insert(self, key_id: int, block: int) -> None:
+        """Publish ``block`` under ``key_id``.  The caller must hold a pool
+        reference on ``block`` on the cache's behalf (and must have checked
+        ``lookup`` first — double publication is a bug)."""
+        if key_id in self._entries:
+            raise ValueError(f"prefix key {key_id} already published")
+        if block in self._by_block:
+            raise ValueError(f"block {block} already published")
+        self._entries[key_id] = block
+        self._by_block[block] = key_id
+
+    def holds_block(self, block: int) -> bool:
+        return block in self._by_block
+
+    def drop_block(self, block: int) -> bool:
+        """Un-publish the entry pointing at ``block`` (before the block
+        mutates, or to reclaim it).  Returns True if an entry was dropped;
+        the caller then releases the cache's pool reference."""
+        kid = self._by_block.pop(block, None)
+        if kid is None:
+            return False
+        del self._entries[kid]
+        return True
+
+    def lru_blocks(self) -> List[int]:
+        """Published blocks, least-recently-used first (snapshot)."""
+        return list(self._entries.values())

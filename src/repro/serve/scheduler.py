@@ -426,6 +426,18 @@ _evict_jit = _LazyJit(lambda: jax.jit(
 ))
 
 
+def _copy_block(cache, src: jax.Array, dst: jax.Array):
+    """Copy-on-write fork (see ``cache.copy_block``): src/dst are traced, so
+    one compiled program forks any block pair; warmed by ``warmup()`` when
+    prefix sharing is on so the first real fork never compiles."""
+    return C.copy_block(cache, src, dst)
+
+
+_copy_block_jit = _LazyJit(lambda: jax.jit(
+    _copy_block, donate_argnames=_resolve_cache_donation(),
+))
+
+
 def _admit_merge(
     last_token: jax.Array,     # (N,) int32 device-resident decode carry
     slot_keys: jax.Array,      # (N, 2) uint32 per-request PRNG keys
@@ -465,6 +477,7 @@ def scheduler_compile_stats() -> Dict[str, int]:
         "admit_paged": _jit_cache_size(_admit_fused_paged_jit),
         "admit_merge": _jit_cache_size(_admit_merge_jit),
         "evict": _jit_cache_size(_evict_jit),
+        "copy_block": _jit_cache_size(_copy_block_jit),
     }
 
 
@@ -569,7 +582,22 @@ class SchedulerStats:
         "overlap_fraction": "1 - host_block_s / wall_s: fraction of step() "
                             "wall time NOT spent blocked on the device — "
                             "the async loop's pipelining win (sync loop "
-                            "reports its serial block share for contrast)",
+                            "reports its serial block share for contrast); "
+                            "clamped to [0, 1] because the two timers nest "
+                            "imperfectly (a block timed inside a step can "
+                            "skew the raw ratio past either end)",
+        "prefix_hit_blocks": "prefix sharing: prompt blocks admitted by "
+                             "pointing the block table at an already-"
+                             "resident shared block instead of acquiring "
+                             "and prefill-writing a new one",
+        "cow_forks": "prefix sharing: copy-on-write forks — a request "
+                     "about to write into a block it shares acquired a "
+                     "private copy via copy_block first",
+        "preemptions": "preemption: resident requests evicted to free "
+                       "blocks for another row's append/fork; the victim "
+                       "re-enters the ready queue and replays from its "
+                       "accepted tokens (bit-identical under the "
+                       "positional key schedule)",
         "attn_impl": "paged decode-attention implementation the session's "
                      "decode program compiled: 'gather' (XLA block gather, "
                      "the oracle) or 'pallas' (in-place block-pool kernel)",
@@ -593,6 +621,9 @@ class SchedulerStats:
     max_decode_gap_ticks: int = 0
     host_block_s: float = 0.0
     wall_s: float = 0.0
+    prefix_hit_blocks: int = 0
+    cow_forks: int = 0
+    preemptions: int = 0
     attn_impl: str = "gather"
 
     @property
@@ -602,7 +633,9 @@ class SchedulerStats:
 
     @property
     def overlap_fraction(self) -> float:
-        return 1.0 - self.host_block_s / self.wall_s if self.wall_s else 0.0
+        if not self.wall_s:
+            return 0.0
+        return min(1.0, max(0.0, 1.0 - self.host_block_s / self.wall_s))
 
     @staticmethod
     def _pct(xs: List[int], q: float) -> float:
@@ -640,6 +673,15 @@ class _ActiveSlot:
     # releases a row whose in-flight chunk provably completes it by length,
     # so a successor can refill the slot before the harvest)
     released: bool = False
+    # evicted mid-decode to free blocks for another row; the request is back
+    # in the ready queue and will replay from its accepted tokens — every
+    # token this state still has in flight is discarded (replay regenerates
+    # it bit-identically under the positional key schedule)
+    preempted: bool = False
+    # async loop: admit-time first token dispatched but not yet harvested
+    # (re-admitted rows have non-empty `tokens` while it is still pending,
+    # so emptiness can no longer stand in for this)
+    pending_first: bool = False
 
 
 @dataclasses.dataclass
@@ -720,6 +762,9 @@ class ServeSession:
         prefill_decode_ratio: Optional[float] = None,
         prefill_token_budget: Optional[int] = None,
         attn_impl: str = "gather",
+        pad_id: int = 0,
+        prefix_sharing: bool = False,
+        preemption: bool = False,
     ):
         if not cfg.embed_input:
             raise ValueError(f"{cfg.name}: token serving requires an embed-input arch")
@@ -749,6 +794,11 @@ class ServeSession:
             raise ValueError(
                 f"prefill_token_budget must be >= 1, got {prefill_token_budget}"
             )
+        if (prefix_sharing or preemption) and cache_layout != "paged":
+            raise ValueError(
+                "prefix_sharing/preemption operate on the shared BlockPool — "
+                'they require cache_layout="paged"'
+            )
         self.cfg = cfg
         self.params = params
         self.sampling = sampling if sampling is not None else SamplingConfig()
@@ -757,6 +807,9 @@ class ServeSession:
         self.policy = policy
         self.loop = loop
         self.attn_impl = attn_impl
+        self.pad_id = int(pad_id)
+        self.prefix_sharing = bool(prefix_sharing)
+        self.preempt = bool(preemption)
         self.prefill_decode_ratio = prefill_decode_ratio
         self.prefill_token_budget = prefill_token_budget
         self.buckets = C.PromptBuckets(prompt_buckets)
@@ -812,7 +865,15 @@ class ServeSession:
             self._held: List[List[int]] = [[] for _ in range(num_slots)]
             self._future = np.zeros((num_slots,), np.int64)
             self._reserved_total = 0           # future blocks across all rows
+            # prefix sharing: content -> physical block; the scheduler takes
+            # one pool ref per published block on the cache's behalf
+            self._prefix = C.PrefixCache() if self.prefix_sharing else None
+            # preemption: req_id -> (accepted tokens, original admit tick),
+            # consumed when the victim re-admits and replays
+            self._preempt_resume: Dict[int, Tuple[List[int], int]] = {}
         else:
+            self._prefix = None
+            self._preempt_resume = {}
             self.cache = init_cache(cfg, num_slots, self.max_len, jnp.dtype(cache_dtype))
         self._last_token = np.zeros((num_slots,), np.int32)
         self._cur_len = np.zeros((num_slots,), np.int32)
@@ -820,7 +881,11 @@ class ServeSession:
         self._base_key = jax.random.PRNGKey(seed)
 
         self._active: List[Optional[_ActiveSlot]] = [None] * num_slots
-        self._pending: List[Request] = []       # future arrivals, sorted
+        # future arrivals: heap of (arrival, submit seq, req) — submit pushes
+        # in O(log n) and _pull_arrivals pops in O(log n), replacing the
+        # per-submit sort + O(n) list.pop(0) that made long traces O(n^2);
+        # the seq tiebreak reproduces the old stable-sort admission order
+        self._pending: List[Tuple[int, int, Request]] = []
         self._ready: List[Tuple[int, int, Request]] = []  # heap (policy key, seq)
         self._seq = 0
         self._next_id = 0
@@ -891,11 +956,29 @@ class ServeSession:
                     f"but the pool only has {self.num_blocks} — it could "
                     "never be admitted"
                 )
+            if (self.prefix_sharing and not self.preempt
+                    and prompt.size % self.block_size
+                    and worst + 1 > self.num_blocks):
+                raise ValueError(
+                    f"request {rid}: prefix sharing reserves {worst} + 1 "
+                    "blocks (worst case + the partial tail's potential "
+                    f"copy-on-write fork) but the pool only has "
+                    f"{self.num_blocks} — it could never be admitted"
+                )
+            if self.preempt and prompt.size + max_new - 1 > self.buckets.max_size:
+                raise ValueError(
+                    f"request {rid}: preemption replays prompt + accepted "
+                    f"tokens through the bucketed prefill — its replay "
+                    f"prompt can reach {prompt.size + max_new - 1} tokens, "
+                    f"exceeding the largest prompt bucket "
+                    f"{self.buckets.max_size}; widen the buckets or lower "
+                    "max_new"
+                )
         if req_id is None:
             req_id = rid
         elif (
             req_id in self._completed
-            or any(r.req_id == req_id for r in self._pending)
+            or any(r.req_id == req_id for _, _, r in self._pending)
             or any(r.req_id == req_id for _, _, r in self._ready)
             or any(s is not None and s.req.req_id == req_id for s in self._active)
         ):
@@ -903,8 +986,8 @@ class ServeSession:
         self._next_id = max(self._next_id, req_id) + 1
         req = Request(req_id, prompt, int(max_new), int(priority), int(arrival))
         if req.arrival > self.clock:
-            self._pending.append(req)
-            self._pending.sort(key=lambda r: r.arrival)
+            heapq.heappush(self._pending, (req.arrival, self._seq, req))
+            self._seq += 1
         else:
             self._push_ready(req)
         return req_id
@@ -939,6 +1022,143 @@ class ServeSession:
         right-padding past the last prompt block is dropped, never stored."""
         return -(-(prompt_len + max_new - 1) // self.block_size)
 
+    # -- prefix sharing / preemption helpers ---------------------------------
+
+    def _eff_prompt(self, req: Request) -> np.ndarray:
+        """The prompt a (re-)admission actually prefills: the original
+        prompt, extended by the accepted tokens snapshotted at preemption —
+        recompute-based re-admission replays the victim as a longer prompt,
+        and the positional fold_in key schedule makes the replayed samples
+        bit-identical to the uninterrupted run."""
+        resume = self._preempt_resume.get(req.req_id)
+        if resume is None:
+            return req.prompt
+        return np.concatenate(
+            [req.prompt, np.asarray(resume[0], np.int32)]
+        ).astype(np.int32)
+
+    def _reclaimable_blocks(self) -> int:
+        """Published blocks held ONLY by the prefix cache (refcount 1):
+        evictable on demand, so admission may count them as free."""
+        if self._prefix is None:
+            return 0
+        return sum(1 for b in self._prefix.lru_blocks()
+                   if self.blocks.refcount(b) == 1)
+
+    def _reclaim_cache_block(self) -> bool:
+        """Evict the least-recently-used cache-only published block back to
+        the free heap.  Returns False when every published block is still
+        shared with a resident request (nothing to reclaim)."""
+        if self._prefix is None:
+            return False
+        for b in self._prefix.lru_blocks():
+            if self.blocks.refcount(b) == 1:
+                self._prefix.drop_block(b)
+                self.blocks.release(b)          # the cache's own reference
+                return True
+        return False
+
+    def _pick_victim(self, excl_slot: int) -> Optional[_ActiveSlot]:
+        """Preemption victim: the least-important resident row — highest
+        policy key (lowest priority class), then youngest admit, then
+        highest req_id — excluding the row that needs the block."""
+        best = None
+        best_key = None
+        for state in self._active:
+            if (state is None or state.done or state.released
+                    or state.preempted or state.slot == excl_slot):
+                continue
+            key = (self._ready_key(state.req), state.admitted_tick,
+                   state.req.req_id)
+            if best_key is None or key > best_key:
+                best, best_key = state, key
+        return best
+
+    def _preempt(self, state: _ActiveSlot) -> None:
+        """Evict ``state`` mid-decode: snapshot its accepted tokens for
+        replay, free its private blocks (shared ones just decref — the
+        zeroed table row makes any in-flight writes sentinel-dropped), and
+        push the original request back on the ready queue."""
+        state.preempted = True
+        self._preempt_resume[state.req.req_id] = (
+            list(state.tokens), state.admitted_tick
+        )
+        self._release_resources(state)
+        self._push_ready(state.req)
+        self.stats.preemptions += 1
+
+    def _acquire_block(self, requesting_slot: int) -> int:
+        """One block for ``requesting_slot``, escalating: free heap ->
+        reclaim a cache-only published block -> (preemption on) evict the
+        least-important other resident row, repeating until a block frees.
+        Deadlock-free: submit bounds every request's worst case at
+        ``num_blocks``, so once every other row is evicted and every
+        cache-only block reclaimed, the pool can always fund the requester's
+        next block."""
+        b = self.blocks.acquire()
+        if b is not None:
+            return b
+        while self._reclaim_cache_block():
+            b = self.blocks.acquire()
+            if b is not None:
+                return b
+        if not self.preempt:
+            raise AssertionError("block append failed despite reservation")
+        while True:
+            victim = self._pick_victim(requesting_slot)
+            if victim is None:
+                raise AssertionError(
+                    "block pool exhausted with no victim left — submit's "
+                    "worst-case bound should make this unreachable"
+                )
+            self._preempt(victim)
+            while self._reclaim_cache_block():
+                pass
+            b = self.blocks.acquire()
+            if b is not None:
+                return b
+
+    def _admit_block(self) -> int:
+        """One block for an admission row.  Never preempts: admission was
+        gated on ``free + reclaimable`` (preemption) or the reservation
+        (without), so free-heap + cache reclaim must always fund it."""
+        b = self.blocks.acquire()
+        while b is None and self._reclaim_cache_block():
+            b = self.blocks.acquire()
+        assert b is not None, "admission admitted an unfundable request"
+        return b
+
+    def _cow_guard(self, slot: int, state: _ActiveSlot) -> None:
+        """Copy-on-write: before a chunk writes into the block holding
+        ``cur_len`` (the only pre-existing block a decode chunk can touch —
+        later positions land in freshly acquired private blocks), make that
+        block privately owned and unpublished.  Publication is dropped first
+        (the content is about to diverge from its key); if the block is
+        still shared with another request after that, fork it through
+        ``copy_block`` into a private copy."""
+        cur = int(self._cur_len[slot])
+        idx = cur // self.block_size
+        held = self._held[slot]
+        if idx >= len(held):
+            return                          # next write opens a fresh block
+        b = held[idx]
+        if self._prefix is not None and self._prefix.holds_block(b):
+            self._prefix.drop_block(b)
+            self.blocks.release(b)          # the cache's reference
+        if self.blocks.refcount(b) <= 1:
+            return                          # sole owner: write in place
+        nb = self._acquire_block(slot)
+        self.cache = _copy_block_jit(self.cache, np.int32(b), np.int32(nb))
+        self.blocks.release(b)              # this row's shared reference
+        held[idx] = nb
+        self._tables[slot, idx] = nb
+        self.stats.cow_forks += 1
+        if not self.preempt:
+            # the fork consumes the +1 reserve _admit_many added for a
+            # shared tail, keeping appends infallible without preemption
+            self._future[slot] -= 1
+            self._reserved_total -= 1
+
     def _admit_width(self, n: int) -> int:
         """Admission rows are width-bucketed to powers of two (capped at
         ``num_slots``) so small admissions don't pay a full-width prefill:
@@ -959,15 +1179,19 @@ class ServeSession:
         reservation ``step`` took out when it popped the request."""
         assert 0 < len(reqs) <= self.pool.free_count
         A = self._admit_width(len(reqs))
-        bucket = max(self.buckets.bucket(r.prompt.size) for r in reqs)
-        prompts = np.zeros((A, bucket), np.int32)
+        effs = [self._eff_prompt(r) for r in reqs]   # replay prompt if resumed
+        bucket = max(self.buckets.bucket(e.size) for e in effs)
+        # right-pad with the model's real pad id: token 0 can be a meaningful
+        # vocab entry, and the masked teacher-forced ssm/hybrid prefill rows
+        # see the pad positions before their per-row freeze
+        prompts = np.full((A, bucket), self.pad_id, np.int32)
         prompt_lens = np.ones((A,), np.int32)
         valid = np.zeros((A,), bool)
         req_ids = np.zeros((A,), np.int32)
         row_slot = [self.pool.acquire() for _ in reqs]
         for i, req in enumerate(reqs):
-            plen = req.prompt.size
-            prompts[i, :plen] = req.prompt
+            plen = effs[i].size
+            prompts[i, :plen] = effs[i]
             prompt_lens[i] = plen
             valid[i] = True
             req_ids[i] = req.req_id
@@ -980,17 +1204,60 @@ class ServeSession:
         if self.layout == "paged":
             nb = -(-bucket // self.block_size)
             block_ids = np.full((A, nb), self.num_blocks, np.int32)
+            bs = self.block_size
             for i, req in enumerate(reqs):
                 slot = row_slot[i]
-                ninit = -(-req.prompt.size // self.block_size)
-                got = self.blocks.acquire_many(ninit)
-                assert got is not None, "reservation admitted an unfundable request"
-                block_ids[i, :ninit] = got
-                self._held[slot] = got
+                eff = effs[i]
+                plen = int(eff.size)
+                ninit = -(-plen // bs)
+                held: List[int] = []
                 self._tables[slot, :] = self.num_blocks
-                self._tables[slot, :ninit] = got
-                self._future[slot] = self._worst_blocks(req.prompt.size, req.max_new) - ninit
-                self._reserved_total -= ninit          # reservation -> held
+                if self._prefix is not None:
+                    # rolling-key walk over the prompt's blocks: a hit maps
+                    # the table entry at the already-resident block and
+                    # leaves block_ids at the sentinel, so the (still full-
+                    # shape) prefill dispatch's writes for that span are
+                    # dropped; a miss acquires, writes, and publishes.
+                    # Publishing happens host-side before the next request
+                    # of this batch is processed, so batch-mates share too
+                    # (the single dispatch writes each block exactly once —
+                    # the one non-sentinel row).
+                    parent = C.PrefixCache.ROOT
+                    for j in range(ninit):
+                        toks = eff[j * bs:min((j + 1) * bs, plen)]
+                        kid = self._prefix.key(parent, toks)
+                        parent = kid
+                        hit = self._prefix.lookup(kid)
+                        if hit is not None:
+                            self.blocks.share(hit)
+                            held.append(hit)
+                            self.stats.prefix_hit_blocks += 1
+                        else:
+                            b = self._admit_block()
+                            block_ids[i, j] = b
+                            held.append(b)
+                            self.blocks.share(b)    # the cache's reference
+                            self._prefix.insert(kid, b)
+                else:
+                    for j in range(ninit):
+                        b = self._admit_block()
+                        block_ids[i, j] = b
+                        held.append(b)
+                self._held[slot] = held
+                self._tables[slot, :ninit] = held
+                if not self.preempt:
+                    # a partial tail under sharing is (or may become)
+                    # published/shared: its eventual copy-on-write fork
+                    # consumes one reserved block, pre-funded by
+                    # _pop_admissible's +1 (see _cow_guard)
+                    fork_reserve = int(
+                        self._prefix is not None and plen % bs != 0
+                    )
+                    self._future[slot] = (
+                        self._worst_blocks(req.prompt.size, req.max_new)
+                        - ninit + fork_reserve
+                    )
+                    self._reserved_total -= ninit      # reservation -> held
             self.cache, tok0s, req_keys = _admit_fused_paged_jit(
                 cfg=self.cfg, params=self.params, cache=self.cache,
                 prompts=prompts, prompt_lens=prompt_lens, block_ids=block_ids,
@@ -1045,9 +1312,17 @@ class ServeSession:
                 slot = row_slot[i]
                 self._cur_len[slot] = int(prompt_lens[i])
                 self._last_emit_work[slot] = self.stats.work_ticks
-                self.stats.admitted += 1
-                self.stats.ttft_ticks.append(self.clock - req.arrival)
-                state = _ActiveSlot(req, slot, [], self.clock)
+                resume = self._preempt_resume.pop(req.req_id, None)
+                if resume is None:
+                    self.stats.admitted += 1
+                    self.stats.ttft_ticks.append(self.clock - req.arrival)
+                    state = _ActiveSlot(req, slot, [], self.clock)
+                else:
+                    # re-admission after preemption: the request keeps its
+                    # accepted tokens and original admit tick — admitted/
+                    # ttft were already counted at first admit
+                    state = _ActiveSlot(req, slot, list(resume[0]), resume[1])
+                state.pending_first = True
                 self._active[slot] = state
                 states.append(state)
             self._pending_tok0.append((states, tok0s))
@@ -1067,11 +1342,16 @@ class ServeSession:
             self._cur_len[slot] = int(prompt_lens[i])
             self._slot_keys[slot] = req_keys[i]
             self._last_emit_work[slot] = self.stats.work_ticks
-            self.stats.admitted += 1
+            resume = self._preempt_resume.pop(req.req_id, None)
+            if resume is None:
+                self.stats.admitted += 1
+                self.stats.ttft_ticks.append(self.clock - req.arrival)
+                state = _ActiveSlot(req, slot, [tok0], self.clock)
+            else:
+                state = _ActiveSlot(req, slot, list(resume[0]) + [tok0],
+                                    resume[1])
             self.stats.generated_tokens += 1
-            self.stats.ttft_ticks.append(self.clock - req.arrival)
-            state = _ActiveSlot(req, slot, [tok0], self.clock)
-            if req.max_new == 1 or (eos >= 0 and tok0 == eos):
+            if len(state.tokens) >= req.max_new or (eos >= 0 and tok0 == eos):
                 self._finish(state, "eos" if (eos >= 0 and tok0 == eos) else "length")
             else:
                 self._active[slot] = state
@@ -1117,21 +1397,24 @@ class ServeSession:
     def _ensure_blocks(self, slot: int, hi: int) -> None:
         """Paged layout: append blocks to ``slot``'s table until it covers
         cache position ``hi`` (a no-op when already covered — a request only
-        pays a pool op when its context actually crosses a block boundary)."""
+        pays a pool op when its context actually crosses a block boundary).
+        Without preemption the admission reservation makes the acquire
+        infallible; with it, ``_acquire_block`` reclaims published blocks
+        and evicts other rows until the pool funds the append."""
         held = self._held[slot]
         while len(held) * self.block_size <= hi:
-            b = self.blocks.acquire()
-            assert b is not None, "block append failed despite reservation"
+            b = self._acquire_block(slot)
             self._tables[slot, len(held)] = b
             held.append(b)
-            self._future[slot] -= 1
-            self._reserved_total -= 1
+            if not self.preempt:
+                self._future[slot] -= 1
+                self._reserved_total -= 1
 
     # -- stepping ------------------------------------------------------------
 
     def _pull_arrivals(self) -> None:
-        while self._pending and self._pending[0].arrival <= self.clock:
-            self._push_ready(self._pending.pop(0))
+        while self._pending and self._pending[0][0] <= self.clock:
+            self._push_ready(heapq.heappop(self._pending)[2])
 
     @property
     def n_active(self) -> int:
@@ -1178,18 +1461,53 @@ class ServeSession:
         (slots and memory both had room)."""
         batch: List[Request] = []
         stalled = False
+        pending_need = 0
+        reclaimable = (
+            self._reclaimable_blocks()
+            if self.layout == "paged" and self.preempt else 0
+        )
         while self._ready and len(batch) < self.pool.free_count:
             req = self._ready[0][2]
+            eff_len = req.prompt.size
+            worst = 0
             if self.layout == "paged":
-                worst = self._worst_blocks(req.prompt.size, req.max_new)
-                if worst > self.blocks.free_count - self._reserved_total:
-                    break
-            b = self.buckets.bucket(req.prompt.size)
+                eff_len = int(self._eff_prompt(req).size)
+                if self.preempt:
+                    # oversubscription: admit on the *immediate* prompt need
+                    # (prefix hits only shrink it; cache-only published
+                    # blocks count as free because reclaim evicts them on
+                    # demand) — mid-decode appends are funded by reclaim and
+                    # preemption instead of a worst-case reservation
+                    need = -(-eff_len // self.block_size)
+                    if pending_need + need > (
+                        self.blocks.free_count + reclaimable
+                    ):
+                        break
+                else:
+                    worst = self._worst_blocks(req.prompt.size, req.max_new)
+                    if self._prefix is not None and eff_len % self.block_size:
+                        # +1 pre-funds the partial tail's potential copy-on-
+                        # write fork so mid-decode forks stay infallible
+                        # under the reservation discipline (see _admit_many)
+                        worst += 1
+                    # published blocks pin otherwise-free pool capacity;
+                    # evict LRU cache-only blocks before refusing the head
+                    while (
+                        worst > self.blocks.free_count - self._reserved_total
+                        and self._reclaim_cache_block()
+                    ):
+                        pass
+                    if worst > self.blocks.free_count - self._reserved_total:
+                        break
+            b = self.buckets.bucket(eff_len)
             if b > budget:
                 stalled = True
                 break
             if self.layout == "paged":
-                self._reserved_total += worst
+                if self.preempt:
+                    pending_need += -(-eff_len // self.block_size)
+                else:
+                    self._reserved_total += worst
             budget -= b
             heapq.heappop(self._ready)
             batch.append(req)
@@ -1224,6 +1542,15 @@ class ServeSession:
             for slot, state in enumerate(self._active):
                 if state is None:
                     continue
+                # CoW first: the block holding cur_len must be private and
+                # unpublished before this chunk's writes reach it.  Both the
+                # guard's fork and _ensure_blocks may preempt other rows
+                # (preemption on): a victim later in this loop reads as None,
+                # an earlier one already has its table row zeroed — either
+                # way the active mask below and the sentinel discipline keep
+                # the dispatch exact.
+                if self._prefix is not None:
+                    self._cow_guard(slot, state)
                 hi = min(
                     int(self._cur_len[slot]) + steps - 1,
                     state.req.prompt.size + state.req.max_new - 2,
@@ -1253,7 +1580,9 @@ class ServeSession:
         eos = self.sampling.eos_id
         accepted = 0
         for slot, state in enumerate(states):
-            if state is None or state.done:
+            if state is None or state.done or state.preempted:
+                # preempted rows discard their in-flight tokens (counted
+                # idle): the replay regenerates them bit-identically
                 continue
             # predictively released rows may already have a successor in the
             # slot; leave the successor's emission mark alone
@@ -1305,7 +1634,7 @@ class ServeSession:
         if self.n_active == 0:
             # idle: jump to the next arrival instead of burning empty ticks
             if self._pending:
-                self.clock = max(self.clock + 1, self._pending[0].arrival)
+                self.clock = max(self.clock + 1, self._pending[0][0])
             else:
                 self.clock += 1
             return self._drain_finished()
@@ -1354,7 +1683,7 @@ class ServeSession:
         for state in fl.states:
             if state is None or state.done or state.released:
                 continue
-            tok0_pending = 0 if state.tokens else 1
+            tok0_pending = 1 if state.pending_first else 0
             if len(state.tokens) + tok0_pending + fl.steps >= state.req.max_new:
                 self._release_resources(state)
 
@@ -1394,7 +1723,7 @@ class ServeSession:
         elif prev is None:
             # idle: jump to the next arrival instead of burning empty ticks
             if self._pending:
-                self.clock = max(self.clock + 1, self._pending[0].arrival)
+                self.clock = max(self.clock + 1, self._pending[0][0])
             else:
                 self.clock += 1
         self._inflight = new
@@ -1416,12 +1745,21 @@ class ServeSession:
         eos = self.sampling.eos_id
         for states, tok0s in drained:
             for i, state in enumerate(states):
+                state.pending_first = False
+                if state.preempted:
+                    # preempted before its first token was harvested: the
+                    # resume snapshot holds only accepted tokens, so this
+                    # tok0 is discarded and replayed identically
+                    continue
                 tok0 = int(tok0s[i])
                 state.tokens.append(tok0)
                 self.stats.generated_tokens += 1
-                if state.req.max_new == 1 or (eos >= 0 and tok0 == eos):
+                if (len(state.tokens) >= state.req.max_new
+                        or (eos >= 0 and tok0 == eos)):
                     # discovered one chunk late: the row decoded one garbage
-                    # chunk meanwhile (skipped below via state.done)
+                    # chunk meanwhile (skipped below via state.done);
+                    # len(tokens) covers re-admitted rows that resume with
+                    # their accepted tokens already in the list
                     self._finish(
                         state, "eos" if (eos >= 0 and tok0 == eos) else "length"
                     )
@@ -1534,6 +1872,12 @@ class ServeSession:
         )
         jax.block_until_ready(out)
         self.cache = out[0]
+        if self.layout == "paged" and self.prefix_sharing:
+            # copy-on-write fork program: src == dst makes the warmup copy a
+            # content no-op; src/dst are traced, so this one compile serves
+            # every real fork
+            self.cache = _copy_block_jit(self.cache, np.int32(0), np.int32(0))
+            jax.block_until_ready(self.cache)
         if self.zero_on_evict:
             self.cache = _evict_jit(self.cache, np.int32(0))
             jax.block_until_ready(self.cache)

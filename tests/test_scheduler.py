@@ -406,3 +406,81 @@ def test_quantized_modes_serve_with_frozen_weights(mode):
         assert toks.shape == (4,)
         assert 0 <= int(toks.min()) and int(toks.max()) < cfg.vocab_size
     assert sess.stats.completed == 4
+
+# ---------------------------------------------------------------------------
+# PR-6 satellite regressions
+# ---------------------------------------------------------------------------
+
+
+def test_slot_pool_release_many_atomic():
+    """A bad batch (double-free, out-of-range, duplicate-in-batch) leaves
+    the pool COMPLETELY untouched — validation runs before any mutation."""
+    p = SlotPool(3)
+    a, b = p.acquire(), p.acquire()
+    for bad in ([a, 9], [a, a], [a, b, b], [2]):   # range/dup/over/not-held
+        with pytest.raises(ValueError):
+            p.release_many(bad)
+        assert p.free_count == 1 and p.busy_count == 2
+    p.release_many([a, b])
+    assert p.free_count == 3 and p.busy_count == 0
+
+
+def test_pending_heap_preserves_admission_order():
+    """The arrival queue is a heap now (was an O(n^2) sorted-list pop(0));
+    on a large trace with heavy arrival ties the ready order must stay
+    EXACTLY the old semantics: arrival time, ties broken by submission
+    order."""
+    import heapq
+
+    sess = _session(_cfg(), policy="fifo")
+    rng = np.random.default_rng(23)
+    arrivals = [int(a) for a in rng.integers(0, 40, 500)]   # dense ties
+    ids = [sess.submit(np.asarray([1 + i % 7], np.int32), max_new=1,
+                       arrival=a, req_id=i)
+           for i, (a) in enumerate(arrivals)]
+    # reference: stable sort of (arrival, submission index)
+    expected = [i for _, i in sorted((a, i) for i, a in enumerate(arrivals))]
+    got = []
+    for clock in range(max(arrivals) + 1):
+        sess.clock = clock
+        sess._pull_arrivals()
+        while sess._ready:
+            got.append(heapq.heappop(sess._ready)[2].req_id)
+    assert got == expected == [ids[i] for i in expected]
+
+
+def test_overlap_fraction_clamped():
+    """Clock jitter can make summed host-block time exceed (or undershoot)
+    the wall clock; the reported fraction is clamped to [0, 1]."""
+    from repro.serve import SchedulerStats
+
+    st = SchedulerStats()
+    assert st.overlap_fraction == 0.0              # no wall time yet
+    st.wall_s, st.host_block_s = 1.0, 2.5          # jitter: block > wall
+    assert st.overlap_fraction == 0.0
+    st.host_block_s = -0.5                         # jitter: negative block
+    assert st.overlap_fraction == 1.0
+    st.host_block_s = 0.25
+    assert st.overlap_fraction == 0.75
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["granite-3-2b", "falcon-mamba-7b"])
+def test_pad_id_is_semantics_preserving(arch):
+    """The bucketed prefill pad token is masked out of attention and the
+    teacher-forced admit: serving the same trace with pad_id=0 and a
+    deliberately in-vocab pad_id=7 must be bit-identical (attention AND
+    ssm/hybrid cache families)."""
+    cfg = _cfg(arch)
+    rng = np.random.default_rng(29)
+    trace = _random_trace(rng, 6, cfg.vocab_size, arrival_rate=1.0)
+    outs = {}
+    for pad in (0, 7):
+        sess = ServeSession(cfg, _params(cfg), num_slots=2, max_len=16,
+                            prompt_buckets=(4, 8), pad_id=pad)
+        ids = [sess.submit(p, max_new=n, arrival=t, req_id=i)
+               for i, (p, n, t) in enumerate(trace)]
+        res = sess.run(max_steps=10_000)
+        assert sess.drained
+        outs[pad] = {i: res[i].tokens.tolist() for i in ids}
+    assert outs[0] == outs[7]
