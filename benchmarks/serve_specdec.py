@@ -1,0 +1,243 @@
+"""Self-speculative decoding: the approximate-multiplier path as a draft
+model, measured against the exact non-speculative paged baseline.
+
+Every arm serves the SAME trace through ``repro.serve.scheduler
+.ServeSession`` (paged layout, identical buckets/pool/slots, greedy):
+
+* **baseline** — exact non-speculative decode, one token per tick;
+* **spec arms** — ``spec_decode=True``: each tick runs ``draft_k`` decode
+  steps through the approximate path (same weights, only ``cfg.approx``
+  swapped — see ``repro.serve.engine.draft_config``), then ONE exact
+  verify pass over the ``draft_k + 1`` positions that accepts the longest
+  matching prefix plus a correction token.  Outputs are bit-identical to
+  the baseline by construction; the multiplier's error rate shows up ONLY
+  in the accept rate (and therefore the speed), never in the tokens.
+
+The headline readout is the paper's co-design angle: accept rate as a
+function of the draft multiplier (mul8x8_2 vs mul8x8_3 under the
+low-rank compensated path) — a lower-error multiplier drafts more
+accepted tokens per verify.  An ``exact``-draft self-test arm (the draft
+IS the verifier) must read accept_rate == 1.0 exactly.
+
+The JSON artifact (``BENCH_serve_specdec.json``) records per-arm accept
+rate, tokens/s, and verify counts, the cross-arm token-mismatch count
+(must be 0 — asserted), the recompile count across the timed passes
+(must be 0), and ``SchedulerStats.DOCS`` under ``field_docs`` so every
+metric key is self-describing.
+
+    PYTHONPATH=src python benchmarks/serve_specdec.py
+    PYTHONPATH=src python benchmarks/serve_specdec.py --smoke --out /tmp/b.json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import numpy as np
+
+BUCKETS = (8, 16, 32)
+NEW_CHOICES = (4, 8, 12, 16)
+MAX_LEN = 64
+BLOCK_SIZE = 8
+DRAFT_ARMS = (("approx_lowrank", "mul8x8_2"), ("approx_lowrank", "mul8x8_3"))
+
+
+def _tiny_cfg():
+    from repro.configs import get_config, reduced_config
+
+    return dataclasses.replace(
+        reduced_config(get_config("granite-3-2b")),
+        num_layers=4, d_model=256, num_heads=4, num_kv_heads=2, head_dim=64,
+        d_ff=512, vocab_size=1024, remat=False, q_chunk=64, dtype="float32",
+    )
+
+
+def build_trace(n: int, vocab: int, seed: int = 0, rate: float = 1.0,
+                max_new: int | None = None):
+    """[(prompt, max_new, arrival_tick)] — mixed prompt lengths under the
+    bucket set, Poisson-ish arrivals."""
+    rng = np.random.default_rng(seed)
+    choices = [c for c in NEW_CHOICES if max_new is None or c <= max_new]
+    trace, t = [], 0
+    for _ in range(n):
+        t += int(rng.poisson(rate))
+        prompt = rng.integers(0, vocab,
+                              int(rng.integers(2, BUCKETS[-1] + 1))).astype(np.int32)
+        trace.append((prompt, int(choices[rng.integers(len(choices))]), t))
+    return trace
+
+
+def run_arm(cfg, params, trace, *, spec: bool, draft_mode: str = "approx",
+            multiplier: str = "mul8x8_2", draft_k: int = 4,
+            num_slots: int = 4):
+    """Warm pass (compiles the spec tick / decode tick and every prefill
+    program), then a timed fresh-session pass.  Returns
+    (tok/s, results, stats, recompiles, seconds)."""
+    from repro.serve.scheduler import ServeSession, scheduler_compile_stats
+
+    def serve():
+        sess = ServeSession(
+            cfg, params, num_slots=num_slots, max_len=MAX_LEN,
+            prompt_buckets=BUCKETS, cache_layout="paged",
+            block_size=BLOCK_SIZE, spec_decode=spec, draft_k=draft_k,
+            draft_mode=draft_mode, draft_multiplier=multiplier,
+        )
+        for p, n, t in trace:
+            sess.submit(p, max_new=n, arrival=t)
+        sess.run()
+        return sess
+
+    warm = serve()
+    warm.warmup()                            # any program the trace missed
+    before = scheduler_compile_stats()
+    t0 = time.perf_counter()
+    sess = serve()
+    dt = time.perf_counter() - t0
+    recompiles = sum(scheduler_compile_stats().values()) - sum(before.values())
+    useful = sum(len(r.tokens) for r in sess.results.values())
+    return useful / dt, sess.results, sess.stats, recompiles, dt
+
+
+def exact_draft_selftest(cfg, params, *, draft_k: int = 4):
+    """``draft_mode="exact"``: the draft is the verifier, so every drafted
+    token must survive.  max_new is a multiple of draft_k + 1, so no tick
+    is clipped by end-of-request truncation and the accept rate must read
+    exactly 1.0."""
+    from repro.serve.scheduler import ServeSession
+
+    rng = np.random.default_rng(7)
+    sess = ServeSession(
+        cfg, params, num_slots=2, max_len=MAX_LEN, prompt_buckets=BUCKETS,
+        cache_layout="paged", block_size=BLOCK_SIZE, spec_decode=True,
+        draft_k=draft_k, draft_mode="exact",
+    )
+    for i in range(4):
+        p = rng.integers(0, cfg.vocab_size, int(rng.integers(2, 9)))
+        sess.submit(p.astype(np.int32), max_new=2 * (draft_k + 1), req_id=i)
+    sess.run(max_steps=10_000)
+    return sess.stats.accept_rate
+
+
+def bench(requests: int = 32, num_slots: int = 4, draft_k: int = 4,
+          seed: int = 0, max_new: int | None = None):
+    from repro.models.transformer import init_params
+    from repro.serve.scheduler import SchedulerStats
+
+    cfg = _tiny_cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    trace = build_trace(requests, cfg.vocab_size, seed=seed, max_new=max_new)
+
+    base_tps, base_res, base_st, base_rc, base_dt = run_arm(
+        cfg, params, trace, spec=False, num_slots=num_slots,
+    )
+    mismatches = 0
+    recompiles = base_rc
+    arms = []
+    for draft_mode, multiplier in DRAFT_ARMS:
+        tps, res, st, rc, dt = run_arm(
+            cfg, params, trace, spec=True, draft_mode=draft_mode,
+            multiplier=multiplier, draft_k=draft_k, num_slots=num_slots,
+        )
+        mismatches += sum(
+            not np.array_equal(base_res[rid].tokens, res[rid].tokens)
+            for rid in base_res
+        )
+        recompiles += rc
+        arms.append({
+            "draft_mode": draft_mode,
+            "multiplier": multiplier,
+            "tok_s": round(tps, 1),
+            "speedup_vs_baseline": round(tps / base_tps, 3),
+            "accept_rate": round(st.accept_rate, 4),
+            "accepted_tokens": st.accepted_tokens,
+            "draft_tokens": st.draft_tokens,
+            "verify_calls": st.verify_calls,
+            "ticks": st.ticks,
+            "seconds": round(dt, 4),
+        })
+    return {
+        "bench": "serve_specdec",
+        "requests": requests,
+        "seed": seed,
+        "draft_k": draft_k,
+        "prompt_buckets": list(BUCKETS),
+        "max_new_choices": [c for c in NEW_CHOICES
+                            if max_new is None or c <= max_new],
+        "max_len": MAX_LEN,
+        "block_size": BLOCK_SIZE,
+        "num_slots": num_slots,
+        "useful_tokens": sum(len(r.tokens) for r in base_res.values()),
+        "baseline_tok_s": round(base_tps, 1),
+        "baseline_ticks": base_st.ticks,
+        "baseline_s": round(base_dt, 4),
+        "spec_arms": arms,
+        "exact_draft_accept_rate": exact_draft_selftest(
+            cfg, params, draft_k=draft_k),
+        "token_mismatches": mismatches,
+        "recompiles_after_warmup": recompiles,
+        "field_docs": dict(SchedulerStats.DOCS),
+    }
+
+
+def run(requests: int = 32):
+    """benchmarks/run.py entry: (name, us_per_call, derived) rows."""
+    r = bench(requests=requests)
+    rows = [(f"serve/specdec_baseline", 1e6 / r["baseline_tok_s"],
+             f"{r['baseline_tok_s']} tok/s exact non-spec")]
+    for arm in r["spec_arms"]:
+        rows.append((
+            f"serve/specdec_{arm['draft_mode']}_{arm['multiplier']}",
+            1e6 / arm["tok_s"],
+            f"{arm['tok_s']} tok/s accept={arm['accept_rate']} "
+            f"({arm['accepted_tokens']}/{arm['draft_tokens']}), "
+            f"mismatches={r['token_mismatches']}",
+        ))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--num-slots", type=int, default=4)
+    ap.add_argument("--draft-k", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="miniature config: exercises every oracle without "
+                         "the full trace (CI gate for the harness itself)")
+    ap.add_argument("--out", default="BENCH_serve_specdec.json")
+    args = ap.parse_args()
+    max_new = None
+    if args.smoke:
+        args.requests = min(args.requests, 8)
+        max_new = 8
+    r = bench(requests=args.requests, num_slots=args.num_slots,
+              draft_k=args.draft_k, seed=args.seed, max_new=max_new)
+    with open(args.out, "w") as f:
+        json.dump(r, f, indent=2)
+        f.write("\n")
+    print(json.dumps({k: v for k, v in r.items() if k != "field_docs"},
+                     indent=2))
+    failures = []
+    if r["token_mismatches"]:
+        failures.append(
+            f"{r['token_mismatches']} request outputs differ from the exact "
+            "baseline — the verify pass failed the exactness contract")
+    if r["recompiles_after_warmup"]:
+        failures.append(f"{r['recompiles_after_warmup']} recompiles after warmup")
+    if r["exact_draft_accept_rate"] != 1.0:
+        failures.append(
+            f"exact-draft self-test accept rate "
+            f"{r['exact_draft_accept_rate']} != 1.0")
+    for arm in r["spec_arms"]:
+        if not (0.0 <= arm["accept_rate"] <= 1.0) or arm["verify_calls"] <= 0:
+            failures.append(f"arm {arm['multiplier']}: degenerate readout")
+    for msg in failures:
+        print(f"FAIL: {msg}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -111,6 +111,19 @@ def main(argv=None):
     ap.add_argument("--prefill-token-budget", type=int, default=None,
                     help="continuous engine: flat per-step prefill token "
                          "budget (alternative to --prefill-decode-ratio)")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="paged layout: self-speculative decoding — each "
+                         "tick runs --draft-k steps through the "
+                         "approximate draft path, then one exact verify "
+                         "pass accepts the longest matching prefix "
+                         "(outputs bit-identical to non-speculative)")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="spec decode: drafted positions per verify")
+    ap.add_argument("--draft-mode", default="approx",
+                    choices=EXECUTION_MODES,
+                    help="spec decode: the draft path's execution mode "
+                         "(the draft multiplier reuses --multiplier; "
+                         "'exact' is the every-token-accepts self-test)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -162,6 +175,8 @@ def main(argv=None):
             prefill_token_budget=args.prefill_token_budget,
             attn_impl=args.attn_impl, pad_id=args.pad_id,
             prefix_sharing=args.prefix_sharing, preemption=args.preemption,
+            spec_decode=args.spec_decode, draft_k=args.draft_k,
+            draft_mode=args.draft_mode, draft_multiplier=args.multiplier,
         )
         sess.warmup()
         for _ in range(args.requests):
@@ -194,6 +209,11 @@ def main(argv=None):
                 print(f"  sharing: {st.prefix_hit_blocks} prefix-hit blocks, "
                       f"{st.cow_forks} CoW forks, "
                       f"{st.preemptions} preemptions")
+        if args.spec_decode:
+            print(f"  spec decode: draft {args.draft_mode}/{args.multiplier} "
+                  f"k={args.draft_k}, accept rate {st.accept_rate*100:.1f}% "
+                  f"({st.accepted_tokens}/{st.draft_tokens} drafted tokens "
+                  f"over {st.verify_calls} verifies)")
         first = results[min(results)]
         print("sample:", first.full_sequence.tolist())
         return

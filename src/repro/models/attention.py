@@ -28,6 +28,7 @@ __all__ = [
     "self_attention",
     "decode_attention",
     "paged_decode_attention",
+    "paged_verify_attention",
     "seed_kv_cache",
 ]
 
@@ -384,4 +385,73 @@ def paged_decode_attention(
         vg = new_v[block_table].reshape(B, W * block_size, n_kv, hd)
         out = attention_core(q, kg, vg, causal=False, kv_len=cur_len + 1, q_chunk=1)
     out = L.dense(out.reshape(B, 1, n_heads * hd), p.wo, cfg)
+    return out, (new_k, new_v)
+
+
+def paged_verify_attention(
+    x: jax.Array,                 # (B, S, d) — S = draft_k + 1 verify positions
+    p: AttnParams,
+    k_blocks: jax.Array,          # (num_blocks, block_size, Hkv, hd) one layer
+    v_blocks: jax.Array,
+    block_table: jax.Array,       # (B, W) int32 physical block ids
+    cur_len: jax.Array,           # (B,) position of the FIRST verify token
+    *,
+    block_size: int,
+    n_heads: int,
+    n_kv: int,
+    cfg: ApproxConfig,
+    rope_theta: float = 10000.0,
+    use_rope: bool = True,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Multi-position decode attention for speculative verification: score
+    ``S`` consecutive tokens of row ``b`` at cache positions ``cur_len[b] +
+    j`` in ONE pass against the paged pool.
+
+    Projections and rope run batched over the S positions (per-position
+    math is independent, so float results match the single-token path
+    bit-for-bit); K/V for all S positions are scattered through the block
+    table first (sentinel/out-of-table targets dropped, exactly as in
+    ``paged_decode_attention``), and then each position attends with its
+    own ragged causal horizon ``kv_len = cur_len + j + 1``.  The attention
+    itself deliberately reuses ``attention_core`` once per verify position
+    (Sq == 1), NOT one batched Sq == S call: that makes every position's
+    score/softmax/AV reduction the exact instruction sequence of the
+    sequential decode oracle, so greedy verification is bit-identical *by
+    construction* rather than by numerical accident.  S is the (small)
+    draft depth, so the unrolled loop costs S tiny einsums against the one
+    shared block gather — the gather transient, the dominant term, is
+    materialized once.
+
+    Always the gather read path: the Pallas paged-attention kernel's tile
+    schedule is single-query (see ROADMAP TPU hardening); since gather and
+    kernel greedy tokens are bit-identical, a kernel session can draft
+    through the kernel and verify through this path without breaking the
+    exactness contract."""
+    B, S, _ = x.shape
+    hd = w_dim(p.wq, 1) // n_heads
+    q = L.dense(x, p.wq, cfg).reshape(B, S, n_heads, hd)
+    k = L.dense(x, p.wk, cfg).reshape(B, S, n_kv, hd)
+    v = L.dense(x, p.wv, cfg).reshape(B, S, n_kv, hd)
+    pos = cur_len[:, None] + jnp.arange(S, dtype=cur_len.dtype)[None, :]
+    if use_rope:
+        q, k = L.apply_rope(q, k, pos, theta=rope_theta)
+    num_blocks = k_blocks.shape[0]
+    W = block_table.shape[1]
+    blk = pos // block_size                      # (B, S)
+    off = pos % block_size
+    phys = jnp.take_along_axis(block_table, jnp.minimum(blk, W - 1), axis=1)
+    phys = jnp.where(blk < W, phys, num_blocks)  # past-table -> dropped
+    new_k = k_blocks.at[phys, off].set(k.astype(k_blocks.dtype))
+    new_v = v_blocks.at[phys, off].set(v.astype(v_blocks.dtype))
+    kg = new_k[block_table].reshape(B, W * block_size, n_kv, hd)
+    vg = new_v[block_table].reshape(B, W * block_size, n_kv, hd)
+    outs = [
+        attention_core(
+            q[:, j : j + 1], kg, vg, causal=False,
+            kv_len=cur_len + j + 1, q_chunk=1,
+        )
+        for j in range(S)
+    ]
+    out = jnp.concatenate(outs, axis=1)          # (B, S, H, hd)
+    out = L.dense(out.reshape(B, S, n_heads * hd), p.wo, cfg)
     return out, (new_k, new_v)

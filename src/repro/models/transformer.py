@@ -30,6 +30,7 @@ from repro.models.attention import (
     decode_attention,
     init_attn,
     paged_decode_attention,
+    paged_verify_attention,
     seed_kv_cache,
     self_attention,
 )
@@ -43,6 +44,7 @@ __all__ = [
     "seed_cache",
     "decode_step",
     "paged_decode_step",
+    "paged_verify_step",
     "FFNParams",
 ]
 
@@ -525,6 +527,76 @@ def paged_decode_step(
             attn_impl=attn_impl,
         )
         return _decode_mlp(cfg, x + h, layer, a), (kc, vc)
+
+    x, (k_new, v_new) = _scan_decode(
+        body, x, (params["layers"], cache["k"], cache["v"]), cfg.scan_layers
+    )
+    return _head(cfg, params, x), {"k": k_new, "v": v_new}
+
+
+def paged_verify_step(
+    cfg: ModelConfig,
+    params: Dict[str, Any],
+    cache: Dict[str, jax.Array],
+    batch: Dict[str, jax.Array],
+    cur_len: jax.Array,                 # (B,) position of the first token
+    block_tables: jax.Array,            # (B, W) int32
+    *,
+    block_size: int,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Speculative-decoding verify pass: score ``S = draft_k + 1``
+    consecutive tokens per row against the paged cache in ONE dispatch.
+
+    ``batch["tokens"]`` is (B, S): row ``b``'s token ``j`` sits at cache
+    position ``cur_len[b] + j``.  Returns (logits (B, S, V), new_cache):
+    ``logits[:, j]`` is the next-token distribution *after* token ``j`` —
+    what a sequential ``paged_decode_step`` at ``cur_len + j`` would have
+    produced — and the cache holds this pass's K/V (computed under
+    ``cfg.approx``, i.e. the verifier's exact path) at positions
+    ``[cur_len, cur_len + S)``, overwriting whatever the draft pass wrote
+    there.  Position/rope/masking per verify slot are exactly the
+    single-token decode path's (see ``paged_verify_attention``), so greedy
+    acceptance against this pass is bit-identical to sequential decoding.
+
+    Dense-like attention families only: MoE routing is capacity-coupled
+    across the token batch, so a (B*S)-token verify would route
+    differently than B sequential single-token steps and the acceptance
+    rule would lose its exactness contract."""
+    if cfg.family in ("ssm", "hybrid"):
+        raise NotImplementedError("paged verify applies to attention-family caches only")
+    if cfg.family == "moe":
+        raise NotImplementedError(
+            "moe routing is capacity-coupled across the token batch — a "
+            "batched verify pass routes differently than sequential decode, "
+            "breaking the speculative acceptance contract"
+        )
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.embed_input:
+        x = params["embed"][batch["tokens"]].astype(dtype)
+    else:
+        x = batch["embeddings"].astype(dtype)
+    S = x.shape[1]
+    if cfg.pos_embedding == "sinusoidal":
+        pos = cur_len[:, None] + jnp.arange(S, dtype=cur_len.dtype)[None, :]
+        x = x + L.sinusoidal_at(pos.reshape(-1), cfg.d_model).reshape(
+            x.shape[0], S, cfg.d_model
+        ).astype(dtype)
+
+    a = cfg.approx
+
+    def body(x, scanned):
+        layer, kc, vc = scanned
+        h, (kc, vc) = paged_verify_attention(
+            L.rms_norm(x, layer["ln1"]), layer["attn"], kc, vc,
+            block_tables, cur_len,
+            block_size=block_size,
+            n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads, cfg=a,
+            rope_theta=cfg.rope_theta,
+            use_rope=cfg.pos_embedding in ("rope", "m_rope"),
+        )
+        x = x + h
+        return x + _ffn(L.rms_norm(x, layer["ln2"]), layer["ffn"], a,
+                        cfg.fuse_gate_up), (kc, vc)
 
     x, (k_new, v_new) = _scan_decode(
         body, x, (params["layers"], cache["k"], cache["v"]), cfg.scan_layers

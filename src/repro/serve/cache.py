@@ -64,6 +64,7 @@ __all__ = [
     "scatter_prompt_blocks",
     "copy_block",
     "merge_admit_carry",
+    "merge_spec_len",
     "evict_slot",
     "slot_view",
     "PromptBuckets",
@@ -161,6 +162,24 @@ def merge_admit_carry(
         jnp.where(valid[:, None], keys.astype(slot_keys.dtype), slot_keys[slots])
     )
     return lt, sk
+
+
+def merge_spec_len(
+    cur_len: jax.Array,
+    slots: jax.Array,
+    lens: jax.Array,
+    valid: jax.Array,
+) -> jax.Array:
+    """Scatter an admission batch's prompt lengths ``lens`` (A,) into the
+    device-resident ``cur_len`` carry (N,) at rows ``slots``.
+
+    Speculative decoding advances rows by data-dependent accepted counts,
+    so the async serve loop keeps ``cur_len`` on device alongside the
+    decode carry.  Same no-op discipline as :func:`merge_admit_carry`:
+    rows with ``valid == False`` rewrite the values they gathered."""
+    return cur_len.at[slots].set(
+        jnp.where(valid, lens.astype(cur_len.dtype), cur_len[slots])
+    )
 
 
 def insert_prefill_kv(cache: Any, kvs: Tuple[jax.Array, jax.Array], slot: jax.Array) -> Any:

@@ -32,6 +32,7 @@ benchmarks/kernel_bench.py).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
@@ -57,6 +58,7 @@ __all__ = [
     "serve_step",
     "select_token",
     "resolve_execution_mode",
+    "draft_config",
     "freeze_params",
     "EXECUTION_MODES",
 ]
@@ -87,6 +89,28 @@ def resolve_execution_mode(mode: str, multiplier: str = "mul8x8_2") -> ApproxCon
     if mode == "approx_lowrank":
         return ApproxConfig(multiplier=multiplier, mode="lowrank")
     raise ValueError(f"execution mode {mode!r} not in {EXECUTION_MODES}")
+
+
+def draft_config(cfg: ModelConfig, draft_mode: str,
+                 multiplier: str = "mul8x8_2") -> ModelConfig:
+    """The self-speculative DRAFT model's config: the verifier's ``cfg``
+    with only ``approx`` swapped for ``draft_mode``'s execution pipeline.
+
+    This is the whole parameter dispatch of self-speculative decoding —
+    draft and verifier share every weight; what differs is which multiplier
+    path the projection matmuls route through (``layers.dense`` reads
+    ``cfg.approx`` at trace time, so the swap costs one extra compiled
+    decode program and zero extra parameter memory).  The accept rate the
+    scheduler then measures is a live end-to-end readout of the paper's
+    error-rate claim for ``multiplier``.
+
+    ``draft_mode`` may be any execution mode, including ``"exact"`` (a
+    self-test: the draft then *is* the verifier and every token must be
+    accepted).  The returned config is hashable and therefore usable as a
+    static jit argument, same as ``cfg`` itself."""
+    return dataclasses.replace(
+        cfg, approx=resolve_execution_mode(draft_mode, multiplier)
+    )
 
 
 def freeze_params(cfg: ModelConfig, params):

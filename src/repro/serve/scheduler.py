@@ -121,9 +121,10 @@ from repro.models.transformer import (
     init_cache,
     init_paged_cache,
     paged_decode_step,
+    paged_verify_step,
 )
 from repro.serve import cache as C
-from repro.serve.engine import SamplingConfig, select_token
+from repro.serve.engine import SamplingConfig, draft_config, select_token
 
 __all__ = [
     "Request",
@@ -263,6 +264,121 @@ def _decode_tick(
 _decode_tick_jit = _LazyJit(lambda: jax.jit(
     _decode_tick,
     static_argnames=("cfg", "sampling", "steps", "block_size", "attn_impl"),
+    donate_argnames=_resolve_cache_donation(),
+))
+
+
+def _spec_tick(
+    cfg: ModelConfig,
+    draft_cfg: ModelConfig,
+    params,
+    cache,
+    last_token: jax.Array,     # (N,) int32
+    cur_len: jax.Array,        # (N,) int32 — position of last_token
+    active: jax.Array,         # (N,) bool
+    slot_keys: jax.Array,      # (N, 2) uint32 per-request PRNG keys
+    tables: jax.Array,         # (N, W) int32 — spec decode is paged-only
+    *,
+    sampling: SamplingConfig,
+    draft_k: int,
+    block_size: int,
+    attn_impl: str,
+):
+    """One self-speculative work tick: ``draft_k`` decode steps through the
+    approximate draft path (``draft_cfg`` differs from ``cfg`` only in
+    ``cfg.approx`` — same params, zero extra weights), then ONE exact
+    verify pass over the K+1 positions [last accepted token; K drafts],
+    accepting per row the longest draft prefix that matches the exact
+    sampler plus the verifier's correction token.
+
+    Exactness by construction, for ANY sampling config: the verify step
+    replays the sequential decode's per-position instruction sequence
+    (``paged_verify_attention``), and the positional ``fold_in(slot_key,
+    position)`` key schedule makes the exact token at position ``p`` a
+    function of the prefix alone — a token is only accepted when its whole
+    prefix matched, so accepted tokens are bit-identical to the
+    non-speculative oracle.  The draft's only power is over *which*
+    positions get verified, i.e. throughput, never content.
+
+    Cache discipline: the draft scan writes approximate K/V at positions
+    ``c .. c+K-1`` and the verify pass overwrites ``c .. c+K`` with exact
+    K/V; positions past the accept point hold wrong-token K/V but sit
+    beyond the new ``cur_len`` and are rewritten by the next tick's draft
+    or verify before any attention horizon reaches them (the same
+    masked-overshoot discipline as ``_decode_tick``; sentinel table
+    entries drop writes past a row's allocation).
+
+    Returns ``(cache, toks, n_acc, last_token, cur_len)``: ``toks`` is
+    (K+1, N) with each row's accepted tokens in ``toks[:n_acc[row], row]``
+    (zeros past them), ``n_acc`` is (N,) in 1..K+1 for live rows / 0 for
+    inactive ones, and the carries advance per row by its own ``n_acc`` —
+    the async loop feeds them straight into the next dispatch."""
+    S = draft_k + 1
+
+    def one(carry, _):
+        cache, tok, pos = carry
+        logits, cache = paged_decode_step(
+            draft_cfg, params, cache, {"tokens": tok[:, None]}, pos,
+            tables, block_size=block_size, attn_impl=attn_impl,
+        )
+        # the draft samples with the SAME positional keys as the verifier,
+        # so a perfect draft (draft_mode="exact") accepts every token
+        keys = jax.vmap(jax.random.fold_in)(slot_keys, pos + 1)
+        nxt = jax.vmap(lambda l, k: select_token(l[None], sampling, k)[0])(
+            logits[:, 0, :], keys
+        )
+        nxt = jnp.where(active, nxt, 0)
+        return (cache, nxt, pos + active), nxt
+
+    (cache, _, _), drafts = jax.lax.scan(
+        one, (cache, last_token, cur_len), None, length=draft_k
+    )
+    drafts = drafts.T                                # (N, K)
+
+    tokens_in = jnp.concatenate([last_token[:, None], drafts], axis=1)
+    logits, cache = paged_verify_step(
+        cfg, params, cache, {"tokens": tokens_in}, cur_len, tables,
+        block_size=block_size,
+    )
+    # exact token at position cur_len + j + 1, for j = 0..K
+    pos = cur_len[:, None] + 1 + jnp.arange(S, dtype=cur_len.dtype)[None, :]
+    keys = jax.vmap(
+        lambda k, p: jax.vmap(jax.random.fold_in, in_axes=(None, 0))(k, p)
+    )(slot_keys, pos)
+    exact = jax.vmap(jax.vmap(
+        lambda l, k: select_token(l[None], sampling, k)[0]
+    ))(logits, keys)                                 # (N, K+1)
+
+    # longest matching draft prefix m -> emit those m tokens plus the
+    # verifier's correction token exact[m]
+    match = (exact[:, :draft_k] == drafts).astype(jnp.int32)
+    n_acc = jnp.sum(jnp.cumprod(match, axis=1), axis=1) + 1
+    if sampling.eos_id >= 0:
+        # never emit past the first exact eos (the oracle stops there)
+        is_eos = exact == sampling.eos_id
+        first = jnp.where(
+            jnp.any(is_eos, axis=1), jnp.argmax(is_eos, axis=1), S
+        )
+        n_acc = jnp.minimum(n_acc, first + 1)
+    n_acc = jnp.where(active, n_acc, 0)
+    idx = jnp.arange(S, dtype=jnp.int32)[None, :]
+    toks = jnp.where((idx < n_acc[:, None]) & active[:, None], exact, 0)
+    new_last = jnp.take_along_axis(
+        exact, jnp.maximum(n_acc - 1, 0)[:, None], axis=1
+    )[:, 0]
+    last_token = jnp.where(active, new_last, last_token)
+    max_pos = tables.shape[1] * block_size - 1       # == max_len - 1
+    cur_len = jnp.where(
+        active, jnp.minimum(cur_len + n_acc, max_pos), cur_len
+    )
+    return cache, toks.T, n_acc, last_token, cur_len     # toks: (K+1, N)
+
+
+_spec_tick_jit = _LazyJit(lambda: jax.jit(
+    _spec_tick,
+    static_argnames=(
+        "cfg", "draft_cfg", "sampling", "draft_k", "block_size", "attn_impl"
+    ),
     donate_argnames=_resolve_cache_donation(),
 ))
 
@@ -457,6 +573,22 @@ def _admit_merge(
 _admit_merge_jit = _LazyJit(lambda: jax.jit(_admit_merge))
 
 
+def _spec_merge_len(
+    cur_len: jax.Array,        # (N,) int32 device-resident length carry
+    slots: jax.Array,          # (A,) int32 — distinct slot ids
+    lens: jax.Array,           # (A,) int32 admitted prompt lengths
+    valid: jax.Array,          # (A,) bool — rows actually admitted
+):
+    """Async speculative loop: merge an admission batch's prompt lengths
+    into the device-resident ``cur_len`` carry (see ``cache.merge_spec_len``
+    — spec rows advance by data-dependent accepted counts, so the async
+    loop keeps ``cur_len`` on device next to the token carry)."""
+    return C.merge_spec_len(cur_len, slots, lens, valid)
+
+
+_spec_merge_len_jit = _LazyJit(lambda: jax.jit(_spec_merge_len))
+
+
 def _jit_cache_size(fn) -> int:
     """Compiled-program count of a jitted callable. ``_cache_size`` is a
     private jax attribute (stable across 0.4.x); fall back to a sentinel
@@ -472,6 +604,8 @@ def scheduler_compile_stats() -> Dict[str, int]:
     that triggers zero recompiles leaves every count unchanged."""
     return {
         "decode_tick": _jit_cache_size(_decode_tick_jit),
+        "spec_tick": _jit_cache_size(_spec_tick_jit),
+        "spec_merge_len": _jit_cache_size(_spec_merge_len_jit),
         "admit_fused": _jit_cache_size(_admit_fused_jit),
         "admit_decode": _jit_cache_size(_admit_decode_jit),
         "admit_paged": _jit_cache_size(_admit_fused_paged_jit),
@@ -547,7 +681,9 @@ class SchedulerStats:
         "admit_calls": "batched prefill dispatches (one per admission "
                        "batch, covering 1..num_slots requests)",
         "prefills": "prompt-bucket size -> requests prefilled at that "
-                    "bucket",
+                    "bucket (each request's OWN effective-prompt bucket — "
+                    "replayed preemption victims count at their longer "
+                    "replay bucket — not the admit batch's padding bucket)",
         "peak_active": "max concurrently-resident requests",
         "peak_blocks_in_use": "paged layout: max KV pool blocks held at "
                               "once",
@@ -601,6 +737,19 @@ class SchedulerStats:
         "attn_impl": "paged decode-attention implementation the session's "
                      "decode program compiled: 'gather' (XLA block gather, "
                      "the oracle) or 'pallas' (in-place block-pool kernel)",
+        "draft_tokens": "speculative decoding: tokens proposed by the "
+                        "approximate draft path (draft_k per live row per "
+                        "verify)",
+        "accepted_tokens": "speculative decoding: drafted tokens the exact "
+                           "verifier accepted — excludes the correction "
+                           "token every verify emits, so accepted == "
+                           "drafted means a perfect draft",
+        "verify_calls": "speculative decoding: per-row exact verify "
+                        "passes (one per live row per spec tick)",
+        "accept_rate": "speculative decoding: accepted_tokens / "
+                       "draft_tokens — the live end-to-end readout of the "
+                       "draft multiplier's error rate (0.0 when spec "
+                       "decode is off)",
     }
 
     ticks: int = 0
@@ -625,6 +774,15 @@ class SchedulerStats:
     cow_forks: int = 0
     preemptions: int = 0
     attn_impl: str = "gather"
+    draft_tokens: int = 0
+    accepted_tokens: int = 0
+    verify_calls: int = 0
+
+    @property
+    def accept_rate(self) -> float:
+        if not self.draft_tokens:
+            return 0.0
+        return self.accepted_tokens / self.draft_tokens
 
     @property
     def slot_utilization(self) -> float:
@@ -698,6 +856,9 @@ class _Inflight:
     steps: int
     states: List[Optional[_ActiveSlot]]
     work_end: int
+    # speculative chunks only: (N,) device future of per-row accepted
+    # counts (the chunk's rows advanced unevenly — see _spec_tick)
+    n_acc: Any = None
 
 
 # ---------------------------------------------------------------------------
@@ -737,9 +898,22 @@ class ServeSession:
     prompt tokens each ``step()`` may admit while decodes are resident
     (``ratio * n_active * steps_per_tick`` resp. a flat budget), so a burst
     of long prompts spreads over several steps instead of stalling every
-    resident decode behind one giant prefill train.  ``close()`` flushes
-    the in-flight chunk and seals the session: later ``submit``/``step``
-    raise ``RuntimeError``."""
+    resident decode behind one giant prefill train.
+
+    ``spec_decode=True`` turns each work tick into SELF-speculative
+    decoding (paged layout, ``steps_per_tick=1`` only): ``draft_k`` decode
+    steps through the approximate draft path (``draft_mode`` x
+    ``draft_multiplier`` — the same weights with only ``cfg.approx``
+    swapped, see ``engine.draft_config``), then one exact verify pass that
+    accepts each row's longest matching draft prefix plus a correction
+    token.  Accepted outputs are bit-identical to the non-speculative
+    session under float execution BY CONSTRUCTION (see ``_spec_tick``), so
+    ``stats.accept_rate`` is a pure throughput readout of the draft
+    multiplier's error rate — the paper's claim, measured end-to-end.
+    Rows advance unevenly (1..draft_k+1 tokens per tick), which is why the
+    async loop keeps a device-resident length carry next to the token
+    carry.  ``close()`` flushes the in-flight chunk and seals the session:
+    later ``submit``/``step`` raise ``RuntimeError``."""
 
     def __init__(
         self,
@@ -765,6 +939,10 @@ class ServeSession:
         pad_id: int = 0,
         prefix_sharing: bool = False,
         preemption: bool = False,
+        spec_decode: bool = False,
+        draft_k: int = 4,
+        draft_mode: str = "approx",
+        draft_multiplier: str = "mul8x8_2",
     ):
         if not cfg.embed_input:
             raise ValueError(f"{cfg.name}: token serving requires an embed-input arch")
@@ -799,6 +977,27 @@ class ServeSession:
                 "prefix_sharing/preemption operate on the shared BlockPool — "
                 'they require cache_layout="paged"'
             )
+        if spec_decode:
+            if cache_layout != "paged":
+                raise ValueError(
+                    "spec_decode verifies drafted positions against the "
+                    'block pool — it requires cache_layout="paged"'
+                )
+            if steps_per_tick != 1:
+                raise ValueError(
+                    "spec_decode replaces the decode chunk with draft_k "
+                    "drafts + one verify per tick — steps_per_tick must "
+                    f"stay 1, got {steps_per_tick}"
+                )
+            if draft_k < 1:
+                raise ValueError(f"draft_k must be >= 1, got {draft_k}")
+            if cfg.family == "moe":
+                raise ValueError(
+                    "spec_decode requires a dense attention family: moe "
+                    "routing is capacity-coupled across the token batch, "
+                    "so a batched verify would route differently than "
+                    "sequential decode and lose the exactness contract"
+                )
         self.cfg = cfg
         self.params = params
         self.sampling = sampling if sampling is not None else SamplingConfig()
@@ -812,6 +1011,16 @@ class ServeSession:
         self.preempt = bool(preemption)
         self.prefill_decode_ratio = prefill_decode_ratio
         self.prefill_token_budget = prefill_token_budget
+        self.spec = bool(spec_decode)
+        self.draft_k = int(draft_k)
+        self.draft_mode = draft_mode if self.spec else None
+        # the draft model IS the session model with only cfg.approx swapped
+        # (shared weights; one extra compiled decode program) — see
+        # engine.draft_config
+        self.draft_cfg = (
+            draft_config(cfg, draft_mode, draft_multiplier) if self.spec
+            else None
+        )
         self.buckets = C.PromptBuckets(prompt_buckets)
         if self.buckets.max_size > self.max_len:
             raise ValueError(
@@ -900,6 +1109,14 @@ class ServeSession:
         # it chains chunk outputs and admit merges into the next dispatch
         self._lt_dev: jax.Array = jnp.zeros((num_slots,), jnp.int32)
         self._sk_dev: jax.Array = jnp.zeros((num_slots, 2), jnp.uint32)
+        # speculative async loop: rows advance by data-dependent accepted
+        # counts, so cur_len joins the device carry (_cl_dev); the host
+        # keeps _cur_len as a conservative UPPER bound (every live row
+        # charged the full draft_k + 1 at dispatch, reconciled at harvest)
+        # for block allocation, and _cl_true as the truth through the last
+        # harvested chunk (the CoW guard's lower bound)
+        self._cl_dev: jax.Array = jnp.zeros((num_slots,), jnp.int32)
+        self._cl_true = np.zeros((num_slots,), np.int32)
         # admissions dispatched since the last harvest: their first sampled
         # tokens are fetched together with the next chunk's tokens
         self._pending_tok0: List[Tuple[List[_ActiveSlot], Any]] = []
@@ -943,6 +1160,13 @@ class ServeSession:
                 f"{self.buckets.sizes}) — split the prompt or widen the buckets"
             )
         bucket = self.buckets.bucket(prompt.size)
+        # strict `>`: the exact-fill boundary prompt_len + max_new == max_len
+        # IS admissible — the last cache write lands at position
+        # prompt_len + max_new - 2 <= max_len - 2 (the final token is
+        # sampled, never written; see _worst_blocks) and decode's cur_len
+        # clamp at max_len - 1 is never binding before the row finishes.
+        # Pinned for both layouts by tests/test_scheduler.py
+        # (test_exact_fill_boundary_admits_and_completes).
         if max(bucket, prompt.size + max_new) > self.max_len:
             raise ValueError(
                 f"request {rid}: prompt_len {prompt.size} + max_new {max_new} "
@@ -997,13 +1221,19 @@ class ServeSession:
             self.submit(r.prompt, r.max_new, req_id=r.req_id,
                         priority=r.priority, arrival=r.arrival)
 
-    def _ready_key(self, req: Request) -> int:
+    def _ready_key(self, req: Request, eff_len: Optional[int] = None) -> int:
         """Admission-order key under the session policy (ties broken FIFO by
-        submission sequence)."""
+        submission sequence).  SJF ranks the EFFECTIVE prompt: a preempted
+        request re-admits by replaying prompt + accepted tokens through the
+        prefill, so its cost is the longer replay prompt, not the original
+        ``req.prompt`` (``_pick_victim`` passes the would-be replay length
+        of a still-resident row the same way)."""
         if self.policy == "sjf":
             # shortest job first: expected residency = generation budget +
             # bucketed prefill cost
-            return req.max_new + self.buckets.bucket(req.prompt.size)
+            if eff_len is None:
+                eff_len = int(self._eff_prompt(req).size)
+            return req.max_new + self.buckets.bucket(eff_len)
         if self.policy == "fifo":
             return 0
         return req.priority
@@ -1068,7 +1298,13 @@ class ServeSession:
             if (state is None or state.done or state.released
                     or state.preempted or state.slot == excl_slot):
                 continue
-            key = (self._ready_key(state.req), state.admitted_tick,
+            # a victim re-admits by replaying prompt + accepted tokens, so
+            # rank it on that replay length (what SJF would charge it)
+            key = (self._ready_key(
+                       state.req,
+                       eff_len=state.req.prompt.size + len(state.tokens),
+                   ),
+                   state.admitted_tick,
                    state.req.req_id)
             if best_key is None or key > best_key:
                 best, best_key = state, key
@@ -1128,16 +1364,17 @@ class ServeSession:
         assert b is not None, "admission admitted an unfundable request"
         return b
 
-    def _cow_guard(self, slot: int, state: _ActiveSlot) -> None:
-        """Copy-on-write: before a chunk writes into the block holding
-        ``cur_len`` (the only pre-existing block a decode chunk can touch —
-        later positions land in freshly acquired private blocks), make that
-        block privately owned and unpublished.  Publication is dropped first
-        (the content is about to diverge from its key); if the block is
-        still shared with another request after that, fork it through
-        ``copy_block`` into a private copy."""
-        cur = int(self._cur_len[slot])
-        idx = cur // self.block_size
+    def _cow_guard(self, slot: int, state: _ActiveSlot, idx: int) -> None:
+        """Copy-on-write: before a chunk writes into held block ``idx``,
+        make that block privately owned and unpublished.  Publication is
+        dropped first (the content is about to diverge from its key); if
+        the block is still shared with another request after that, fork it
+        through ``copy_block`` into a private copy.  ``_chunk_inputs``
+        passes the block holding ``cur_len`` (the only pre-existing block a
+        non-speculative chunk can touch — later positions land in freshly
+        acquired private blocks) or, speculatively, every block index the
+        chunk's write span could reach; guarding a privately held index is
+        a no-op."""
         held = self._held[slot]
         if idx >= len(held):
             return                          # next write opens a fresh block
@@ -1284,8 +1521,17 @@ class ServeSession:
                     max_len=self.max_len, cache_dtype=self.cache_dtype,
                 )
         self.stats.admit_calls += 1
-        self.stats.prefills[bucket] = self.stats.prefills.get(bucket, 0) + len(reqs)
-        tok_sum = sum(self.buckets.bucket(r.prompt.size) for r in reqs)
+        # charge the EFFECTIVE prompts: a replayed preemption victim
+        # prefills prompt + accepted tokens, not its original prompt —
+        # charging req.prompt here undercounted prefill_tokens/work_ticks
+        # (and so the starvation gauge) after every preemption, and it is
+        # the per-request effective bucket, not the batch-max padding
+        # bucket, that _pop_admissible meters against the budget
+        tok_sum = 0
+        for e in effs:
+            b = self.buckets.bucket(e.size)
+            self.stats.prefills[b] = self.stats.prefills.get(b, 0) + 1
+            tok_sum += b
         self.stats.prefill_tokens += tok_sum
         # prefill device work in decode-width-normalized ticks (the unit of
         # the starvation gauge); padding rows are a constant-factor artifact
@@ -1307,10 +1553,17 @@ class ServeSession:
             self._lt_dev, self._sk_dev = _admit_merge_jit(
                 self._lt_dev, self._sk_dev, slots, tok0s, req_keys, valid
             )
+            if self.spec:
+                # the length carry lives on device too (rows advance by
+                # data-dependent accepted counts) — same fixed-shape merge
+                self._cl_dev = _spec_merge_len_jit(
+                    self._cl_dev, slots, prompt_lens, valid
+                )
             states: List[_ActiveSlot] = []
             for i, req in enumerate(reqs):
                 slot = row_slot[i]
                 self._cur_len[slot] = int(prompt_lens[i])
+                self._cl_true[slot] = int(prompt_lens[i])
                 self._last_emit_work[slot] = self.stats.work_ticks
                 resume = self._preempt_resume.pop(req.req_id, None)
                 if resume is None:
@@ -1538,23 +1791,38 @@ class ServeSession:
         steps = self.steps_per_tick
         tables = None
         block_size = 0
+        # write span past cur_len: a decode chunk's last accepted write
+        # lands at cur_len + steps - 1; a speculative tick's verify writes
+        # through cur_len + draft_k (see _spec_tick)
+        span = self.draft_k if self.spec else steps - 1
         if self.layout == "paged":
+            bs = self.block_size
             for slot, state in enumerate(self._active):
                 if state is None:
                     continue
-                # CoW first: the block holding cur_len must be private and
-                # unpublished before this chunk's writes reach it.  Both the
-                # guard's fork and _ensure_blocks may preempt other rows
-                # (preemption on): a victim later in this loop reads as None,
-                # an earlier one already has its table row zeroed — either
-                # way the active mask below and the sentinel discipline keep
-                # the dispatch exact.
-                if self._prefix is not None:
-                    self._cow_guard(slot, state)
                 hi = min(
-                    int(self._cur_len[slot]) + steps - 1,
+                    int(self._cur_len[slot]) + span,
                     state.req.prompt.size + state.req.max_new - 2,
                 )
+                # CoW first: every block this chunk may write into must be
+                # private and unpublished before its writes reach it.  A
+                # non-speculative chunk writes from cur_len; a speculative
+                # async chunk writes anywhere in [_cl_true, hi] (the host
+                # only bounds cur_len between harvests), so guard the whole
+                # candidate range — privately held indices are no-ops.
+                # Both the guard's fork and _ensure_blocks may preempt
+                # other rows (preemption on): a victim later in this loop
+                # reads as None, an earlier one already has its table row
+                # zeroed — either way the active mask below and the
+                # sentinel discipline keep the dispatch exact.
+                if self._prefix is not None:
+                    lo = (
+                        int(self._cl_true[slot])
+                        if self.spec and self.loop == "async"
+                        else int(self._cur_len[slot])
+                    )
+                    for idx in range(lo // bs, hi // bs + 1):
+                        self._cow_guard(slot, state, idx)
                 self._ensure_blocks(slot, hi)
             self.stats.peak_blocks_in_use = max(
                 self.stats.peak_blocks_in_use, self.blocks.busy_count
@@ -1606,6 +1874,55 @@ class ServeSession:
         self.stats.idle_slot_steps += self.num_slots * steps - accepted
         self.stats.generated_tokens += accepted
 
+    def _accept_spec_chunk(
+        self,
+        states: List[Optional[_ActiveSlot]],
+        toks: np.ndarray,          # (draft_k + 1, N)
+        n_acc: np.ndarray,         # (N,)
+        work_end: int,
+    ) -> None:
+        """Speculative counterpart of ``_accept_chunk``: each live row takes
+        its own ``n_acc`` tokens (1..draft_k+1 — uneven per row), finishing
+        on eos / max_new exactly as sequential acceptance would.  A tick's
+        device capacity is ``num_slots * (draft_k + 1)`` token-slots; the
+        accept-rate counters meter the draft multiplier's hit rate
+        (``n_acc - 1`` drafted tokens survived the exact verifier, clipped
+        to what the row could still emit so end-of-request truncation never
+        inflates the readout)."""
+        eos = self.sampling.eos_id
+        accepted = 0
+        cap = self.draft_k + 1
+        for slot, state in enumerate(states):
+            if state is None or state.done or state.preempted:
+                # preempted rows discard their in-flight tokens (counted
+                # idle): the replay regenerates them bit-identically
+                continue
+            early = state.released
+            na = int(n_acc[slot])
+            self.stats.verify_calls += 1
+            self.stats.draft_tokens += self.draft_k
+            emitted = 0
+            for s in range(na):
+                tok = int(toks[s, slot])
+                state.tokens.append(tok)
+                accepted += 1
+                emitted += 1
+                if eos >= 0 and tok == eos:
+                    self._finish(state, "eos")
+                    break
+                if len(state.tokens) >= state.req.max_new:
+                    self._finish(state, "length")
+                    break
+            self.stats.accepted_tokens += max(0, min(na - 1, emitted))
+            if not early:
+                gap = int(work_end - self._last_emit_work[slot])
+                if gap > self.stats.max_decode_gap_ticks:
+                    self.stats.max_decode_gap_ticks = gap
+                self._last_emit_work[slot] = work_end
+        self.stats.busy_slot_steps += accepted
+        self.stats.idle_slot_steps += self.num_slots * cap - accepted
+        self.stats.generated_tokens += accepted
+
     def step(self) -> List[CompletedRequest]:
         """Admit what fits (under the interleaving budget), run one decode
         chunk, release finished slots.  Returns the requests completed
@@ -1640,6 +1957,41 @@ class ServeSession:
             return self._drain_finished()
 
         active, tables, block_size, steps = self._chunk_inputs()
+        if self.spec:
+            self.cache, toks, n_acc, _, _ = _spec_tick_jit(
+                cfg=self.cfg, draft_cfg=self.draft_cfg, params=self.params,
+                cache=self.cache, last_token=self._last_token,
+                cur_len=self._cur_len, active=active,
+                slot_keys=self._slot_keys, tables=tables,
+                sampling=self.sampling, draft_k=self.draft_k,
+                block_size=block_size, attn_impl=self.attn_impl,
+            )
+            tb = time.perf_counter()
+            toks = np.asarray(toks)              # (draft_k + 1, N)
+            n_acc = np.asarray(n_acc)
+            self.stats.host_block_s += time.perf_counter() - tb
+            # one spec tick on the scheduler clock; the device ran
+            # draft_k + 1 token-steps' worth of work
+            self.clock += 1
+            self.stats.ticks += 1
+            self.stats.work_ticks += self.draft_k + 1
+
+            states = list(self._active)
+            self._accept_spec_chunk(states, toks, n_acc, self.stats.work_ticks)
+            for slot, state in enumerate(states):
+                if state is None:
+                    continue
+                # per-row uneven advance: mirror the device carry exactly
+                # (continuing rows accepted all n_acc tokens; finished rows'
+                # values are reset at the slot's next admission)
+                na = int(n_acc[slot])
+                self._cur_len[slot] = min(
+                    self._cur_len[slot] + na, self.max_len - 1
+                )
+                if na:
+                    self._last_token[slot] = int(toks[na - 1, slot])
+            return self._drain_finished()
+
         self.cache, toks, _ = _decode_tick_jit(
             cfg=self.cfg, params=self.params, cache=self.cache,
             last_token=self._last_token, cur_len=self._cur_len,
@@ -1680,11 +2032,15 @@ class ServeSession:
         fl = self._inflight
         if fl is None:
             return
+        # a speculative chunk's guaranteed emission is 1 (accept-0 still
+        # emits the verifier's correction token); lockstep chunks emit
+        # exactly fl.steps
+        min_emit = 1 if self.spec else fl.steps
         for state in fl.states:
             if state is None or state.done or state.released:
                 continue
             tok0_pending = 1 if state.pending_first else 0
-            if len(state.tokens) + tok0_pending + fl.steps >= state.req.max_new:
+            if len(state.tokens) + tok0_pending + min_emit >= state.req.max_new:
                 self._release_resources(state)
 
     def _step_async(self) -> List[CompletedRequest]:
@@ -1699,27 +2055,53 @@ class ServeSession:
         prev, new = self._inflight, None
         if self.n_active:
             active, tables, block_size, steps = self._chunk_inputs()
-            # cur_len is copied because the host mutates it while the chunk
-            # is in flight (numpy operands may be aliased zero-copy by the
-            # device buffer); `active` and `tables` are fresh arrays already
-            self.cache, toks_f, self._lt_dev = _decode_tick_jit(
-                cfg=self.cfg, params=self.params, cache=self.cache,
-                last_token=self._lt_dev, cur_len=self._cur_len.copy(),
-                active=active, slot_keys=self._sk_dev, tables=tables,
-                sampling=self.sampling, steps=steps, block_size=block_size,
-                attn_impl=self.attn_impl,
-            )
-            self.clock += steps
-            self.stats.ticks += steps
-            self.stats.work_ticks += steps
-            new = _Inflight(toks_f, steps, list(self._active),
-                            self.stats.work_ticks)
-            # advance the host view past the chunk just dispatched (the
-            # device carry advances identically; the clamp matches the sync
-            # loop's post-harvest update)
-            self._cur_len = np.minimum(
-                self._cur_len + steps * active, self.max_len - 1
-            ).astype(np.int32)
+            if self.spec:
+                # the length carry is device-resident (_cl_dev): rows
+                # advance by their own accepted counts, which the host
+                # only learns at harvest.  _cur_len meanwhile tracks the
+                # conservative upper bound (full draft_k + 1 per live
+                # row), which is all block allocation needs.
+                (self.cache, toks_f, n_acc_f, self._lt_dev,
+                 self._cl_dev) = _spec_tick_jit(
+                    cfg=self.cfg, draft_cfg=self.draft_cfg,
+                    params=self.params, cache=self.cache,
+                    last_token=self._lt_dev, cur_len=self._cl_dev,
+                    active=active, slot_keys=self._sk_dev, tables=tables,
+                    sampling=self.sampling, draft_k=self.draft_k,
+                    block_size=block_size, attn_impl=self.attn_impl,
+                )
+                self.clock += 1
+                self.stats.ticks += 1
+                self.stats.work_ticks += self.draft_k + 1
+                new = _Inflight(toks_f, 1, list(self._active),
+                                self.stats.work_ticks, n_acc=n_acc_f)
+                self._cur_len = np.minimum(
+                    self._cur_len + (self.draft_k + 1) * active,
+                    self.max_len - 1,
+                ).astype(np.int32)
+            else:
+                # cur_len is copied because the host mutates it while the
+                # chunk is in flight (numpy operands may be aliased
+                # zero-copy by the device buffer); `active` and `tables`
+                # are fresh arrays already
+                self.cache, toks_f, self._lt_dev = _decode_tick_jit(
+                    cfg=self.cfg, params=self.params, cache=self.cache,
+                    last_token=self._lt_dev, cur_len=self._cur_len.copy(),
+                    active=active, slot_keys=self._sk_dev, tables=tables,
+                    sampling=self.sampling, steps=steps,
+                    block_size=block_size, attn_impl=self.attn_impl,
+                )
+                self.clock += steps
+                self.stats.ticks += steps
+                self.stats.work_ticks += steps
+                new = _Inflight(toks_f, steps, list(self._active),
+                                self.stats.work_ticks)
+                # advance the host view past the chunk just dispatched (the
+                # device carry advances identically; the clamp matches the
+                # sync loop's post-harvest update)
+                self._cur_len = np.minimum(
+                    self._cur_len + steps * active, self.max_len - 1
+                ).astype(np.int32)
         elif prev is None:
             # idle: jump to the next arrival instead of burning empty ticks
             if self._pending:
@@ -1738,6 +2120,7 @@ class ServeSession:
         chunk's tokens for the rows that were live at its dispatch."""
         tb = time.perf_counter()
         toks = np.asarray(fl.toks)               # (steps, N)
+        n_acc = np.asarray(fl.n_acc) if fl.n_acc is not None else None
         pend, self._pending_tok0 = self._pending_tok0, []
         drained = [(states, np.asarray(t0s)) for states, t0s in pend]
         self.stats.host_block_s += time.perf_counter() - tb
@@ -1763,7 +2146,28 @@ class ServeSession:
                     self._finish(
                         state, "eos" if (eos >= 0 and tok0 == eos) else "length"
                     )
-        self._accept_chunk(fl.states, toks, fl.steps, fl.work_end)
+        if n_acc is None:
+            self._accept_chunk(fl.states, toks, fl.steps, fl.work_end)
+            return
+        # speculative chunk: reconcile the host length views with the
+        # now-known per-row accepted counts before accepting.  Only rows
+        # still owned by their dispatched occupant matter — a finished or
+        # preempted row's slot values are rewritten at its next admission
+        # (and the identity guard is what makes a successor admitted
+        # between dispatch and harvest safe)
+        for slot, state in enumerate(fl.states):
+            if (state is None or state.done or state.preempted
+                    or self._active[slot] is not state):
+                continue
+            na = int(n_acc[slot])
+            self._cl_true[slot] = min(
+                int(self._cl_true[slot]) + na, self.max_len - 1
+            )
+            ub = int(self._cl_true[slot])
+            if self._inflight is not None and self._inflight.states[slot] is state:
+                ub += self.draft_k + 1           # the still-in-flight chunk
+            self._cur_len[slot] = min(ub, self.max_len - 1)
+        self._accept_spec_chunk(fl.states, toks, n_acc, fl.work_end)
 
     def close(self) -> Dict[int, CompletedRequest]:
         """Flush the pipeline (harvest the in-flight chunk and any pending
@@ -1855,23 +2259,50 @@ class ServeSession:
                 jnp.zeros((A,), jnp.int32), jnp.zeros((A, 2), jnp.uint32),
                 np.zeros((A,), bool),
             )
-        # warm the decode program with the SAME operand types the session's
-        # loop dispatches (async: device-resident carry; sync: host numpy) —
-        # mixing them would leave the first real chunk a cache miss
+            if self.spec and self.loop == "async":
+                # the spec length-carry merge compiles once per admit
+                # width; all-False valid keeps the carry content intact.
+                # The real call passes host numpy prompt_lens — match it
+                self._cl_dev = _spec_merge_len_jit(
+                    self._cl_dev, np.arange(A, dtype=np.int32),
+                    np.ones((A,), np.int32), np.zeros((A,), bool),
+                )
+        # warm the work-tick program with the SAME operand types the
+        # session's loop dispatches (async: device-resident carry; sync:
+        # host numpy) — mixing them would leave the first real chunk a
+        # cache miss.  Speculative sessions dispatch _spec_tick instead of
+        # the decode tick, never both
         dev_carry = self.loop == "async"
-        out = _decode_tick_jit(
-            cfg=self.cfg, params=self.params, cache=self.cache,
-            last_token=self._lt_dev if dev_carry else self._last_token,
-            cur_len=self._cur_len.copy(),
-            active=np.zeros((self.num_slots,), bool),
-            slot_keys=self._sk_dev if dev_carry else self._slot_keys,
-            tables=self._tables.copy() if self.layout == "paged" else None,
-            sampling=self.sampling, steps=self.steps_per_tick,
-            block_size=self.block_size if self.layout == "paged" else 0,
-            attn_impl=self.attn_impl,
-        )
-        jax.block_until_ready(out)
-        self.cache = out[0]
+        if self.spec:
+            out = _spec_tick_jit(
+                cfg=self.cfg, draft_cfg=self.draft_cfg, params=self.params,
+                cache=self.cache,
+                last_token=self._lt_dev if dev_carry else self._last_token,
+                cur_len=self._cl_dev if dev_carry else self._cur_len.copy(),
+                active=np.zeros((self.num_slots,), bool),
+                slot_keys=self._sk_dev if dev_carry else self._slot_keys,
+                tables=self._tables.copy(),
+                sampling=self.sampling, draft_k=self.draft_k,
+                block_size=self.block_size, attn_impl=self.attn_impl,
+            )
+            jax.block_until_ready(out)
+            self.cache = out[0]
+            if dev_carry:
+                self._lt_dev, self._cl_dev = out[3], out[4]
+        else:
+            out = _decode_tick_jit(
+                cfg=self.cfg, params=self.params, cache=self.cache,
+                last_token=self._lt_dev if dev_carry else self._last_token,
+                cur_len=self._cur_len.copy(),
+                active=np.zeros((self.num_slots,), bool),
+                slot_keys=self._sk_dev if dev_carry else self._slot_keys,
+                tables=self._tables.copy() if self.layout == "paged" else None,
+                sampling=self.sampling, steps=self.steps_per_tick,
+                block_size=self.block_size if self.layout == "paged" else 0,
+                attn_impl=self.attn_impl,
+            )
+            jax.block_until_ready(out)
+            self.cache = out[0]
         if self.layout == "paged" and self.prefix_sharing:
             # copy-on-write fork program: src == dst makes the warmup copy a
             # content no-op; src/dst are traced, so this one compile serves

@@ -133,6 +133,9 @@ def test_stats_field_docs_complete():
         f"undocumented: {sorted((fields | props) - documented)}; "
         f"stale docs: {sorted(documented - (fields | props))}"
     )
+    # PR-7 speculative-decoding readouts are part of the bench contract
+    assert {"draft_tokens", "accepted_tokens", "verify_calls",
+            "accept_rate"} <= documented
 
 
 # ---------------------------------------------------------------------------

@@ -465,6 +465,33 @@ def test_overlap_fraction_clamped():
 
 
 @pytest.mark.slow
+@pytest.mark.parametrize("layout", ["slots", "paged"])
+def test_exact_fill_boundary_admits_and_completes(layout):
+    """PR-7 audit of submit's strict `>`: the exact-fill boundary
+    prompt_len + max_new == max_len IS admissible — the final token is
+    sampled, never written, so the last cache write lands at max_len - 2
+    and the decode clamp at max_len - 1 is never binding before the row
+    finishes.  One token more is rejected."""
+    cfg = _cfg()
+    kw = dict(num_slots=2, max_len=16, prompt_buckets=(8,))
+    if layout == "paged":
+        kw.update(cache_layout="paged", block_size=4)
+    sess = ServeSession(cfg, _params(cfg), **kw)
+    with pytest.raises(ValueError, match="exceeds cache max_len"):
+        sess.submit(np.arange(1, 9, dtype=np.int32), max_new=9)
+    prompt = np.arange(1, 9, dtype=np.int32)          # 8 + 8 == max_len
+    rid = sess.submit(prompt, max_new=8)
+    res = sess.run(max_steps=1_000)
+    assert sess.drained
+    assert res[rid].finish_reason == "length"
+    assert len(res[rid].tokens) == 8
+    # the boundary run is bit-identical to an unconstrained cache
+    roomy = ServeSession(cfg, _params(cfg), **{**kw, "max_len": 32})
+    rid2 = roomy.submit(prompt, max_new=8)
+    assert res[rid].tokens.tolist() == roomy.run()[rid2].tokens.tolist()
+
+
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["granite-3-2b", "falcon-mamba-7b"])
 def test_pad_id_is_semantics_preserving(arch):
     """The bucketed prefill pad token is masked out of attention and the

@@ -1,0 +1,393 @@
+"""Self-speculative decoding invariants (serve stack PR 7).
+
+* exactness: with ``spec_decode=True`` the approximate path only ever
+  DRAFTS — every emitted token is re-derived by the exact verify pass, so
+  greedy outputs are bit-identical to the non-speculative oracle and to
+  standalone ``generate``, under both host loops and both attention
+  impls, for any draft execution mode;
+* the self-test draft: ``draft_mode="exact"`` drafts with the very model
+  that verifies, so every drafted token must be accepted
+  (``accept_rate == 1.0`` exactly when max_new is a multiple of
+  draft_k + 1 — no end-of-request clipping);
+* accept extremes: with ``draft_k=1`` every verify is either accept-0
+  (the drafted token was rejected; only the correction token lands) or
+  accept-all-K — an accept rate strictly inside (0, 1) proves BOTH tick
+  shapes occurred and the output still matched the oracle;
+* eos inside the drafted span truncates acceptance exactly where
+  sequential decode would have stopped;
+* preemption mid-flight discards drafted-but-unharvested tokens and the
+  replay is bit-identical (positional key schedule, same as PR 6);
+* fixed compiled shapes: zero recompiles after ``warmup()`` across a
+  randomized trace — the spec tick and length-carry merge are warmed for
+  the session's (draft_k, admit width) set;
+* accounting: a spec tick's device capacity is
+  ``num_slots * (draft_k + 1)`` token-slots; busy counts emitted tokens,
+  the accept-rate counters never exceed their denominators.
+
+PR-7 also carries the preemption-accounting bugfix sweep; the regression
+tests for per-request effective-bucket prefill charging and the SJF
+replay-length key live here with the spec tests (the exact-fill boundary
+test lives in tests/test_scheduler.py, where submit's comment points).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.serve import (
+    SamplingConfig,
+    ServeSession,
+    generate,
+    scheduler_compile_stats,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(arch="granite-3-2b", **over):
+    return dataclasses.replace(
+        reduced_config(get_config(arch)), remat=False, q_chunk=16, **over
+    )
+
+
+_PARAMS = {}
+
+
+def _params(cfg):
+    if cfg.name not in _PARAMS:
+        from repro.models.transformer import init_params
+
+        _PARAMS[cfg.name] = init_params(cfg, KEY)
+    return _PARAMS[cfg.name]
+
+
+def _spec_session(cfg, **over):
+    kw = dict(num_slots=3, max_len=32, prompt_buckets=(4, 8),
+              cache_layout="paged", block_size=4, spec_decode=True,
+              draft_k=3, draft_mode="approx_lowrank")
+    kw.update(over)
+    return ServeSession(cfg, _params(cfg), **kw)
+
+
+def _mixed_prompts(n=4, seed=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, 99, int(rng.integers(2, 9))).astype(np.int32)
+            for _ in range(n)]
+
+
+def _oracle(cfg, prompts, max_new=8, **over):
+    """Sync non-speculative paged run of the same trace."""
+    kw = dict(num_slots=3, max_len=32, prompt_buckets=(4, 8),
+              cache_layout="paged", block_size=4, loop="sync")
+    kw.update(over)
+    sess = ServeSession(cfg, _params(cfg), **kw)
+    ids = [sess.submit(p, max_new=max_new, req_id=i)
+           for i, p in enumerate(prompts)]
+    res = sess.run(max_steps=10_000)
+    assert sess.drained
+    return {i: res[i].tokens.tolist() for i in ids}
+
+
+# ---------------------------------------------------------------------------
+# Construction-time contract (fast tier)
+# ---------------------------------------------------------------------------
+
+
+def test_spec_decode_validation():
+    cfg = _cfg()
+    with pytest.raises(ValueError, match="paged"):
+        ServeSession(cfg, _params(cfg), cache_layout="slots",
+                     spec_decode=True)
+    with pytest.raises(ValueError, match="steps_per_tick"):
+        _spec_session(cfg, steps_per_tick=2)
+    with pytest.raises(ValueError, match="draft_k"):
+        _spec_session(cfg, draft_k=0)
+    moe = _cfg("qwen2-moe-a2.7b")
+    with pytest.raises(ValueError, match="moe"):
+        ServeSession(moe, _params(moe), cache_layout="paged", block_size=4,
+                     max_len=32, prompt_buckets=(4, 8), spec_decode=True)
+
+
+def test_stats_spec_fields_documented():
+    """The accept-rate readout is part of the bench JSON contract."""
+    from repro.serve import SchedulerStats
+
+    assert {"draft_tokens", "accepted_tokens", "verify_calls",
+            "accept_rate"} <= set(SchedulerStats.DOCS)
+    st = SchedulerStats()
+    assert st.accept_rate == 0.0                  # no drafts yet: defined
+    st.draft_tokens, st.accepted_tokens = 8, 6
+    assert st.accept_rate == 0.75
+
+
+# ---------------------------------------------------------------------------
+# PR-7 satellite regressions: preemption-accounting sweep (fast tier)
+# ---------------------------------------------------------------------------
+
+
+def test_ready_key_ranks_preemption_replay_length():
+    """SJF must charge a preempted request its REPLAY prompt (original +
+    accepted tokens), not the original: the replay is what re-admission
+    actually prefills.  Regression — the key used ``req.prompt`` and let
+    an expensive replay jump ahead of genuinely short fresh jobs."""
+    cfg = _cfg()
+    sess = ServeSession(cfg, _params(cfg), num_slots=2, max_len=64,
+                        prompt_buckets=(4, 8, 16), cache_layout="paged",
+                        block_size=4, policy="sjf", preemption=True)
+    rid = sess.submit(np.arange(1, 5, dtype=np.int32), max_new=2)   # bucket 4
+    req = sess._ready[0][2]
+    assert sess._ready_key(req) == 2 + 4
+    # preempted after 5 accepted tokens: replay prompt is 9 -> bucket 16
+    sess._preempt_resume[rid] = ([11, 12, 13, 14, 15], None)
+    assert sess._ready_key(req) == 2 + 16
+    # _pick_victim's explicit override ranks a still-resident row the same
+    assert sess._ready_key(req, eff_len=9) == 2 + 16
+    # ordering: the replay now sorts AFTER a fresh medium job (4 + 8 = 12)
+    fresh = sess.submit(np.arange(1, 6, dtype=np.int32), max_new=4)
+    fresh_req = next(r for _, _, r in sess._ready if r.req_id == fresh)
+    assert sess._ready_key(req) > sess._ready_key(fresh_req) == 12
+
+
+@pytest.mark.slow
+def test_admit_charges_per_request_effective_buckets():
+    """One admission batch with mixed prompt lengths: each request is
+    charged ITS OWN bucket.  Regression — the batch-max padding bucket
+    was charged for every row, overcounting prefill_tokens whenever a
+    batch mixed buckets (and the starvation budget metered the same
+    wrong number)."""
+    cfg = _cfg()
+    sess = ServeSession(cfg, _params(cfg), num_slots=2, max_len=32,
+                        prompt_buckets=(4, 8), cache_layout="paged",
+                        block_size=4, loop="sync")
+    sess.submit(np.asarray([1, 2], np.int32), max_new=2)      # bucket 4
+    sess.submit(np.arange(1, 7, dtype=np.int32), max_new=2)   # bucket 8
+    sess.run(max_steps=1_000)
+    assert sess.drained
+    assert sess.stats.admit_calls == 1           # one batch: buckets mixed
+    assert sess.stats.prefills == {4: 1, 8: 1}
+    assert sess.stats.prefill_tokens == 12        # batch-max would say 16
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("loop", ["sync", "async"])
+def test_preemption_replay_charged_at_replay_bucket(loop):
+    """A preempted victim re-admits by prefilling prompt + accepted
+    tokens: the charge must land in the REPLAY bucket.  Regression — the
+    original prompt's bucket was charged, so every preemption undercounted
+    prefill_tokens/work_ticks and skewed the starvation gauge."""
+    cfg = _cfg()
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(1, 99, 6).astype(np.int32) for _ in range(2)]
+    sess = ServeSession(cfg, _params(cfg), num_slots=2, max_len=32,
+                        prompt_buckets=(8, 32), cache_layout="paged",
+                        block_size=4, num_blocks=5, loop=loop,
+                        preemption=True)
+    for i, p in enumerate(prompts):
+        sess.submit(p, max_new=12, req_id=i)
+    sess.run(max_steps=10_000)
+    assert sess.drained
+    st = sess.stats
+    assert st.preemptions >= 1
+    # every admission (initial + one per replay) left a per-request charge
+    assert sum(st.prefills.values()) == st.admitted + st.preemptions
+    assert st.prefill_tokens == sum(b * n for b, n in st.prefills.items())
+    # the replay prompt (6 + accepted > 8) charges the 32 bucket; the
+    # original-prompt bug charged bucket 8 for every admission
+    assert st.prefills.get(32, 0) >= 1
+
+
+# ---------------------------------------------------------------------------
+# Exactness: spec output == non-spec oracle == generate (slow tier)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("loop", ["sync", "async"])
+@pytest.mark.parametrize("attn_impl", ["gather", "pallas"])
+def test_spec_parity_with_nonspec_oracle(loop, attn_impl):
+    """Greedy spec outputs are bit-identical to the non-speculative paged
+    oracle and to standalone ``generate`` — the approximate path drafts,
+    the exact path decides, so the multiplier's error rate can only cost
+    speed, never tokens."""
+    cfg = _cfg()
+    prompts = _mixed_prompts()
+    oracle = _oracle(cfg, prompts, attn_impl=attn_impl)
+    sess = _spec_session(cfg, loop=loop, attn_impl=attn_impl)
+    ids = [sess.submit(p, max_new=8, req_id=i)
+           for i, p in enumerate(prompts)]
+    res = sess.run(max_steps=10_000)
+    assert sess.drained
+    outs = {i: res[i].tokens.tolist() for i in ids}
+    assert outs == oracle
+    p = prompts[0]
+    alone = np.asarray(
+        generate(cfg, _params(cfg), p[None, :], max_new=8)
+    )[0, len(p):]
+    assert outs[0] == alone.tolist()
+    st = sess.stats
+    # accounting: busy counts emitted tokens; a spec tick's capacity is
+    # num_slots * (draft_k + 1) token-slots
+    assert sum(len(r.tokens) - 1 for r in res.values()) == st.busy_slot_steps
+    assert (st.busy_slot_steps + st.idle_slot_steps
+            == st.ticks * sess.num_slots * (sess.draft_k + 1))
+    assert st.verify_calls > 0
+    assert st.draft_tokens == st.verify_calls * sess.draft_k
+    assert 0 <= st.accepted_tokens <= st.draft_tokens
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("loop", ["sync", "async"])
+def test_exact_draft_accepts_every_token(loop):
+    """``draft_mode="exact"``: the draft IS the verifier, so every drafted
+    token must be accepted.  max_new = 8 is a multiple of draft_k + 1 = 4,
+    so no tick is clipped by end-of-request truncation and the accept
+    rate reads exactly 1.0."""
+    cfg = _cfg()
+    prompts = _mixed_prompts(seed=5)
+    sess = _spec_session(cfg, loop=loop, draft_mode="exact")
+    ids = [sess.submit(p, max_new=8, req_id=i)
+           for i, p in enumerate(prompts)]
+    res = sess.run(max_steps=10_000)
+    assert sess.drained
+    st = sess.stats
+    assert st.accept_rate == 1.0
+    assert st.accepted_tokens == st.draft_tokens > 0
+    assert {i: res[i].tokens.tolist() for i in ids} == _oracle(
+        cfg, prompts, max_new=8
+    )
+
+
+@pytest.mark.slow
+def test_accept_extremes_draft_k1():
+    """draft_k = 1 makes every verify an extreme: accept-0 (draft
+    rejected, only the correction token lands) or accept-all-K.  A
+    random-weight approximate draft lands strictly inside (0, 1), so BOTH
+    tick shapes occurred — and the output still matches the oracle
+    bit-for-bit."""
+    cfg = _cfg()
+    prompts = _mixed_prompts(n=6, seed=7)
+    oracle = _oracle(cfg, prompts, max_new=7)
+    sess = _spec_session(cfg, draft_k=1, loop="sync")
+    ids = [sess.submit(p, max_new=7, req_id=i)
+           for i, p in enumerate(prompts)]
+    res = sess.run(max_steps=10_000)
+    assert sess.drained
+    st = sess.stats
+    assert 0 < st.accepted_tokens < st.draft_tokens
+    assert {i: res[i].tokens.tolist() for i in ids} == oracle
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("draft_mode", ["exact", "approx_lowrank"])
+def test_eos_inside_drafted_span(draft_mode):
+    """EOS at drafted position j truncates acceptance at j even when
+    later drafts matched — exactly where sequential decode stops."""
+    cfg = _cfg()
+    prompt = np.asarray([3, 1, 4, 1], np.int32)
+    base = np.asarray(generate(cfg, _params(cfg), prompt[None], max_new=8))[0, 4:]
+    eos = int(base[2])                           # third generated token
+    sess = _spec_session(cfg, draft_k=4, draft_mode=draft_mode,
+                         sampling=SamplingConfig(eos_id=eos))
+    rid = sess.submit(prompt, max_new=8)
+    other = sess.submit(np.asarray([9, 9], np.int32), max_new=8)
+    res = sess.run(max_steps=10_000)
+    r = res[rid]
+    assert r.finish_reason == "eos"
+    hit = int(np.argmax(base == eos))
+    assert r.tokens[-1] == eos and len(r.tokens) == hit + 1
+    assert np.array_equal(r.tokens, base[: hit + 1])
+    assert len(res[other].tokens) == 8           # co-resident row unaffected
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("loop", ["sync", "async"])
+def test_spec_preemption_bit_identical(loop):
+    """Preemption mid-spec-flight: drafted-but-unharvested tokens are
+    discarded with the victim and the replay regenerates them exactly —
+    starved-pool outputs equal the roomy-pool spec run AND the non-spec
+    oracle, with prefix sharing live underneath."""
+    cfg = _cfg()
+    rng = np.random.default_rng(13)
+    prefix = rng.integers(1, 50, 12)
+    prompts = [np.concatenate([prefix, rng.integers(50, 99, 2)]).astype(np.int32)
+               for _ in range(5)]
+    oracle = _oracle(cfg, prompts, max_new=12, num_slots=2, max_len=64,
+                     prompt_buckets=(8, 32))
+    outs = {}
+    for blocks in (40, 9):                       # roomy vs starved
+        sess = _spec_session(cfg, num_slots=2, max_len=64,
+                             prompt_buckets=(8, 32), num_blocks=blocks,
+                             loop=loop, prefix_sharing=True,
+                             preemption=True)
+        ids = [sess.submit(p, max_new=12, req_id=i)
+               for i, p in enumerate(prompts)]
+        res = sess.run(max_steps=10_000)
+        assert sess.drained
+        outs[blocks] = {i: res[i].tokens.tolist() for i in ids}
+        if blocks == 9:
+            assert sess.stats.preemptions >= 1
+            assert sess.stats.prefix_hit_blocks > 0
+        assert sess._reserved_total == 0
+        assert not sess._preempt_resume
+    assert outs[40] == outs[9] == oracle
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("loop", ["sync", "async"])
+@pytest.mark.parametrize("attn_impl", ["gather", "pallas"])
+def test_spec_zero_recompiles_after_warmup(loop, attn_impl):
+    """warmup() compiles the spec tick and the length-carry merge for the
+    session's (draft_k, admit width) set: NO arrival pattern, prompt
+    length, accept pattern, or max_new mix may recompile afterwards."""
+    cfg = _cfg()
+    sess = _spec_session(cfg, loop=loop, attn_impl=attn_impl)
+    sess.warmup()
+    before = scheduler_compile_stats()
+    rng = np.random.default_rng(3)
+    for i in range(8):
+        p = rng.integers(1, 99, int(rng.integers(2, 9))).astype(np.int32)
+        sess.submit(p, max_new=int(rng.integers(2, 9)),
+                    arrival=int(rng.integers(0, 5)))
+    sess.run(max_steps=10_000)
+    assert sess.drained
+    assert scheduler_compile_stats() == before
+    assert sess.stats.completed == 8
+    assert sess.stats.verify_calls > 0
+
+
+@pytest.mark.slow
+def test_spec_temperature_sampling_matches_nonspec():
+    """The exactness contract is not greedy-only: per-token positional
+    fold_in keys mean the verify pass samples with the SAME keys
+    sequential decode would have used, so temperature outputs are
+    bit-identical too."""
+    cfg = _cfg()
+    sampling = SamplingConfig(temperature=0.8, top_k=8)
+    prompts = _mixed_prompts(n=4, seed=9)
+    oracle = _oracle(cfg, prompts, max_new=6, sampling=sampling, seed=42)
+    sess = _spec_session(cfg, sampling=sampling, seed=42)
+    ids = [sess.submit(p, max_new=6, req_id=i)
+           for i, p in enumerate(prompts)]
+    res = sess.run(max_steps=10_000)
+    assert sess.drained
+    assert {i: res[i].tokens.tolist() for i in ids} == oracle
+
+
+@pytest.mark.slow
+def test_serve_specdec_bench_smoke():
+    """The accept-rate bench harness: a miniature run must complete with
+    the parity/recompile oracles clean (the speed criterion is asserted
+    on the real bench config in CI — this pins the machinery)."""
+    import benchmarks.serve_specdec as B
+
+    r = B.bench(requests=8, max_new=8)
+    assert r["token_mismatches"] == 0
+    assert r["recompiles_after_warmup"] == 0
+    for arm in r["spec_arms"]:
+        assert 0.0 <= arm["accept_rate"] <= 1.0
+        assert arm["verify_calls"] > 0
+    assert r["exact_draft_accept_rate"] == 1.0
+    assert set(r["field_docs"]) >= {"draft_tokens", "accepted_tokens",
+                                    "verify_calls", "accept_rate"}
