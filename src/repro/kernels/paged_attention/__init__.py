@@ -1,4 +1,4 @@
-from repro.kernels.paged_attention.ops import paged_attention_pallas
+from repro.kernels.paged_attention.ops import paged_attention_pallas, validate_tp_heads
 from repro.kernels.paged_attention.ref import paged_attention_ref
 
-__all__ = ["paged_attention_pallas", "paged_attention_ref"]
+__all__ = ["paged_attention_pallas", "paged_attention_ref", "validate_tp_heads"]

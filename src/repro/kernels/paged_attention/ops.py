@@ -12,7 +12,30 @@ import jax.numpy as jnp
 from repro.kernels.interpret import default_interpret as _default_interpret
 from repro.kernels.paged_attention.kernel import paged_attention_kernel_call
 
-__all__ = ["paged_attention_pallas"]
+__all__ = ["paged_attention_pallas", "validate_tp_heads"]
+
+
+def validate_tp_heads(num_heads: int, num_kv_heads: int, tp: int) -> None:
+    """Reject head counts that cannot shard over a ``tp``-way model axis.
+
+    The kernel is mapped per-shard under tensor parallelism (``shard_map``
+    over the head dims of q/k/v and the pool), so each shard must hold an
+    integral number of query AND KV heads — otherwise the per-shard
+    ``H % n_kv`` group structure (each KV head serving ``H // n_kv`` query
+    heads) would differ across shards and the grid would be ragged."""
+    if tp < 1:
+        raise ValueError(f"tp must be >= 1, got {tp}")
+    if num_heads % tp or num_kv_heads % tp:
+        raise ValueError(
+            f"pallas paged attention under tp={tp} needs per-shard integral "
+            f"head counts: num_heads={num_heads}, num_kv_heads={num_kv_heads} "
+            f"must both divide by tp"
+        )
+    if (num_heads // tp) % (num_kv_heads // tp):
+        raise ValueError(
+            f"per-shard group structure broken: {num_heads // tp} query heads "
+            f"not a multiple of {num_kv_heads // tp} KV heads per shard"
+        )
 
 
 def paged_attention_pallas(

@@ -124,6 +124,24 @@ def main(argv=None):
                     help="spec decode: the draft path's execution mode "
                          "(the draft multiplier reuses --multiplier; "
                          "'exact' is the every-token-accepts self-test)")
+    ap.add_argument("--dynamic-draft-k", action="store_true",
+                    help="spec decode: self-tune the draft window down/up "
+                         "a warmed --draft-k -> 1 halving ladder around "
+                         "the break-even accept rate 1/--draft-cost-ratio")
+    ap.add_argument("--draft-cost-ratio", type=float, default=4.0,
+                    help="dynamic draft: verify-position cost over "
+                         "draft-step cost; its inverse is the break-even "
+                         "accept rate")
+    ap.add_argument("--draft-window", type=int, default=32,
+                    help="dynamic draft: rolling (drafted, accepted) "
+                         "chunks judged before each ladder move")
+    ap.add_argument("--tp", type=int, default=0,
+                    help="continuous engine: tensor-parallel degree — "
+                         "serve under a (tp,)-device 'model' mesh with "
+                         "params Megatron-split and the paged KV pool "
+                         "sharded along the KV-head dim (requires "
+                         "--cache-layout paged; on CPU force devices with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -166,6 +184,17 @@ def main(argv=None):
         max_len = max(args.max_len, buckets[-1] + args.new)
         if args.cache_layout == "paged" and max_len % args.block_size:
             max_len += args.block_size - max_len % args.block_size
+        mesh = None
+        if args.tp:
+            if args.cache_layout != "paged":
+                raise SystemExit("--tp requires --cache-layout paged")
+            if args.tp > jax.device_count():
+                raise SystemExit(
+                    f"--tp {args.tp} > {jax.device_count()} visible devices "
+                    "(on CPU: XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count={args.tp})"
+                )
+            mesh = jax.make_mesh((args.tp,), ("model",))
         sess = ServeSession(
             cfg, params, num_slots=args.num_slots, max_len=max_len,
             prompt_buckets=tuple(buckets), sampling=sampling,
@@ -177,6 +206,10 @@ def main(argv=None):
             prefix_sharing=args.prefix_sharing, preemption=args.preemption,
             spec_decode=args.spec_decode, draft_k=args.draft_k,
             draft_mode=args.draft_mode, draft_multiplier=args.multiplier,
+            dynamic_draft_k=args.dynamic_draft_k,
+            draft_cost_ratio=args.draft_cost_ratio,
+            draft_window=args.draft_window,
+            mesh=mesh,
         )
         sess.warmup()
         for _ in range(args.requests):
@@ -209,11 +242,19 @@ def main(argv=None):
                 print(f"  sharing: {st.prefix_hit_blocks} prefix-hit blocks, "
                       f"{st.cow_forks} CoW forks, "
                       f"{st.preemptions} preemptions")
+            if args.tp:
+                print(f"  tensor parallel: tp={st.tp} over {st.devices} "
+                      f"devices, peak KV "
+                      f"{st.peak_block_bytes_per_device/2**20:.2f} MiB/device")
         if args.spec_decode:
             print(f"  spec decode: draft {args.draft_mode}/{args.multiplier} "
                   f"k={args.draft_k}, accept rate {st.accept_rate*100:.1f}% "
                   f"({st.accepted_tokens}/{st.draft_tokens} drafted tokens "
                   f"over {st.verify_calls} verifies)")
+            if args.dynamic_draft_k:
+                print(f"  dynamic draft: k now {st.draft_k_current} "
+                      f"({st.draft_k_shrinks} shrinks, "
+                      f"{st.draft_k_grows} grows)")
         first = results[min(results)]
         print("sample:", first.full_sequence.tolist())
         return

@@ -367,18 +367,49 @@ def paged_decode_attention(
     new_k = k_blocks.at[phys, off].set(k[:, 0].astype(k_blocks.dtype))
     new_v = v_blocks.at[phys, off].set(v[:, 0].astype(v_blocks.dtype))
     if attn_impl == "pallas":
-        from repro.kernels.paged_attention import paged_attention_pallas
+        from repro.kernels.paged_attention import (
+            paged_attention_pallas,
+            validate_tp_heads,
+        )
+        from repro.parallel.sharding import current_mesh, mesh_axis_size
 
         # pre-scatter pool operands on purpose: the kernel fuses the new
         # token in VMEM, so the scatter above only persists it for the
         # NEXT step and never serializes with this step's attention.  The
         # fused token is cast to the POOL dtype first — the kernel must
         # attend the same rounded value every later step will read back
-        out = paged_attention_pallas(
+        def call(qh, kh, vh, kp, vp, bt, cl):
+            return paged_attention_pallas(
+                qh, kh, vh, kp, vp, bt, cl, block_size=block_size
+            )
+
+        mesh = current_mesh()
+        tp = mesh_axis_size("model")
+        if mesh is not None and tp > 1:
+            # pallas_call is not partitioned by GSPMD — map it per shard.
+            # Each shard runs the unmodified kernel over its Hkv/tp pool
+            # heads and H/tp query heads (group structure preserved, see
+            # validate_tp_heads); the block table and lengths replicate, so
+            # every shard walks the same host-global table.
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+
+            validate_tp_heads(n_heads, n_kv, tp)
+            hspec = P(None, "model", None)
+            pspec = P(None, None, "model", None)
+            call = shard_map(
+                call,
+                mesh=mesh,
+                in_specs=(hspec, hspec, hspec, pspec, pspec,
+                          P(None, None), P(None)),
+                out_specs=hspec,
+                check_rep=False,
+            )
+        out = call(
             q[:, 0],
             k[:, 0].astype(k_blocks.dtype), v[:, 0].astype(v_blocks.dtype),
             k_blocks, v_blocks,
-            block_table, cur_len, block_size=block_size,
+            block_table, cur_len,
         )[:, None]
     else:
         kg = new_k[block_table].reshape(B, W * block_size, n_kv, hd)

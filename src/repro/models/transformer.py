@@ -65,14 +65,21 @@ def _init_ffn(key, d: int, ff: int) -> FFNParams:
 
 
 def _ffn(x, p: FFNParams, cfg: ApproxConfig, fuse_gate_up: bool = False):
+    # Megatron split: gate/up are column-parallel, down is row-parallel —
+    # pinning the hidden activation head-sharded over "model" keeps the whole
+    # MLP local per shard with a single psum after w_down (no-op off-mesh).
+    from repro.parallel.sharding import constrain
+
     if fuse_gate_up:
         # §Perf lever: gate & up share one quant + feature pass / wide dot
         w = concat_weights([p.w_gate, p.w_up], axis=1)
         gu = L.dense(x, w, cfg)
         ff = w_dim(p.w_gate, 1)
         h = jax.nn.silu(gu[..., :ff]) * gu[..., ff:]
-        return L.dense(h, p.w_down, cfg)
-    return L.dense(jax.nn.silu(L.dense(x, p.w_gate, cfg)) * L.dense(x, p.w_up, cfg), p.w_down, cfg)
+    else:
+        h = jax.nn.silu(L.dense(x, p.w_gate, cfg)) * L.dense(x, p.w_up, cfg)
+    h = constrain(h, ("batch",) + (None,) * (h.ndim - 2) + ("model",))
+    return L.dense(h, p.w_down, cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -505,6 +512,8 @@ def paged_decode_step(
     (``"pallas"``)."""
     if cfg.family in ("ssm", "hybrid"):
         raise NotImplementedError("paged decode applies to attention-family caches only")
+    from repro.parallel.sharding import constrain
+
     dtype = jnp.dtype(cfg.dtype)
     if cfg.embed_input:
         x = params["embed"][batch["tokens"]].astype(dtype)
@@ -512,6 +521,9 @@ def paged_decode_step(
         x = batch["embeddings"].astype(dtype)
     if cfg.pos_embedding == "sinusoidal":
         x = x + L.sinusoidal_at(cur_len, cfg.d_model)[:, None, :].astype(dtype)
+    # TP: the residual stream stays replicated over "model" — each layer's
+    # row-parallel wo/w_down psum re-materializes it (no-op off-mesh)
+    x = constrain(x, ("batch", None, None))
 
     a = cfg.approx
 
@@ -570,6 +582,8 @@ def paged_verify_step(
             "batched verify pass routes differently than sequential decode, "
             "breaking the speculative acceptance contract"
         )
+    from repro.parallel.sharding import constrain
+
     dtype = jnp.dtype(cfg.dtype)
     if cfg.embed_input:
         x = params["embed"][batch["tokens"]].astype(dtype)
@@ -581,6 +595,7 @@ def paged_verify_step(
         x = x + L.sinusoidal_at(pos.reshape(-1), cfg.d_model).reshape(
             x.shape[0], S, cfg.d_model
         ).astype(dtype)
+    x = constrain(x, ("batch", None, None))
 
     a = cfg.approx
 
@@ -632,5 +647,10 @@ def _mask_pad(cfg: ModelConfig, logits):
 
 
 def _head(cfg: ModelConfig, params, x):
+    from repro.parallel.sharding import constrain
+
     x = L.rms_norm(x, params["final_norm"])
-    return _mask_pad(cfg, L.dense(x, params["lm_head"], cfg.approx)).astype(jnp.float32)
+    logits = _mask_pad(cfg, L.dense(x, params["lm_head"], cfg.approx)).astype(jnp.float32)
+    # TP: lm_head is column-parallel, so logits stay vocab-sharded; sampling
+    # reduces them to token ids and only THOSE replicate back to the host
+    return constrain(logits, ("batch",) + (None,) * (logits.ndim - 2) + ("model",))

@@ -179,12 +179,37 @@ def safe_sharding(mesh: Mesh, spec: P, leaf) -> NamedSharding:
     return NamedSharding(mesh, prune_pspec(mesh, spec, leaf.shape))
 
 
-def cache_pspecs(cfg: ModelConfig, mesh: Mesh, cache_shape: Any) -> Any:
-    """Decode-cache shardings: batch over DP axes; KV heads over model when
-    divisible, otherwise sequence-parallel (SP) over model."""
+def cache_pspecs(cfg: ModelConfig, mesh: Mesh, cache_shape: Any, *, layout: str = "slots") -> Any:
+    """Decode-cache shardings.
+
+    ``layout="slots"`` (per-slot stripes, leaves ``(L, B, S, Hkv, hd)``):
+    batch over DP axes; KV heads over model when divisible, otherwise
+    sequence-parallel (SP) over model.
+
+    ``layout="paged"`` (block pool, leaves ``(L, num_blocks, block_size,
+    Hkv, hd)``): block *contents* shard along the KV-head dim over model —
+    each shard holds ``Hkv/tp`` heads of every block, so the host-global
+    block tables index all shards identically. The block dim is never
+    sharded (tables are host state) and there is no SP fallback: splitting
+    ``block_size`` would partition the softmax *within* single blocks. When
+    ``Hkv`` does not divide the model axis the pool simply replicates.
+    """
+    if layout not in ("slots", "paged"):
+        raise ValueError(f"cache_pspecs: unknown layout {layout!r}")
     dp = batch_axes(mesh)
     tp = "model" if "model" in mesh.axis_names else None
     tp_size = _axis_size(mesh, tp)
+
+    def paged_one(path, leaf):
+        ks = jax.tree_util.keystr(path)
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        if (ks.endswith("['k']") or ks.endswith("['v']")) and tp and shape[3] % tp_size == 0:
+            spec[3] = tp
+        return NamedSharding(mesh, prune_pspec(mesh, P(*spec), shape))
+
+    if layout == "paged":
+        return jax.tree_util.tree_map_with_path(paged_one, cache_shape)
 
     def one(path, leaf):
         ks = jax.tree_util.keystr(path)

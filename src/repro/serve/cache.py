@@ -63,6 +63,7 @@ __all__ = [
     "scatter_rows",
     "scatter_prompt_blocks",
     "copy_block",
+    "pool_bytes_per_device",
     "merge_admit_carry",
     "merge_spec_len",
     "evict_slot",
@@ -233,6 +234,21 @@ def scatter_prompt_blocks(
         return full.at[:, ids].set(part.astype(full.dtype))
 
     return dict(cache, k=write(cache["k"], k), v=write(cache["v"], v))
+
+
+def pool_bytes_per_device(cache: Any) -> int:
+    """Bytes of KV pool resident on EACH device.
+
+    Under tensor-parallel serving the pool shards along the KV-head dim, so
+    every device holds ``1/tp`` of each leaf; ``Sharding.shard_shape`` gives
+    the per-device shard shape for sharded and single-device placements
+    alike, which makes this the bench/stats primitive for the ``1/tp``
+    KV-bytes claim (see benchmarks/serve_tp.py)."""
+    total = 0
+    for leaf in jax.tree.leaves(cache):
+        shard = leaf.sharding.shard_shape(leaf.shape)
+        total += int(np.prod(shard)) * leaf.dtype.itemsize
+    return total
 
 
 def copy_block(cache: Any, src: jax.Array, dst: jax.Array) -> Any:

@@ -103,10 +103,12 @@ Execution modes: the session serves whatever ``cfg.approx`` selects —
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import heapq
 import os
 import time
+from collections import deque
 from typing import Any, ClassVar, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -123,6 +125,7 @@ from repro.models.transformer import (
     paged_decode_step,
     paged_verify_step,
 )
+from repro.parallel.sharding import constrain as _sh_constrain
 from repro.serve import cache as C
 from repro.serve.engine import SamplingConfig, draft_config, select_token
 
@@ -165,6 +168,22 @@ def _resolve_cache_donation() -> Tuple[str, ...]:
     if env == "0":
         return ()
     return ("cache",) if jax.default_backend() != "cpu" else ()
+
+
+def _pin_pool(cache):
+    """Pin the paged pool's placement at program outputs: block contents
+    shard along the KV-head dim over ``"model"`` (matching ``cache_pspecs
+    (layout="paged")``).  Without the pin, jit is free to pick a different
+    output sharding than the input's, and the NEXT dispatch of the same
+    program would see changed operand placements — one recompile per flip.
+    ``constrain`` degrades to a no-op off-mesh and drops the axis when the
+    head count does not divide it, so single-device serving is untouched."""
+    spec = (None, None, None, "model", None)
+    return dict(
+        cache,
+        k=_sh_constrain(cache["k"], spec),
+        v=_sh_constrain(cache["v"], spec),
+    )
 
 
 class _LazyJit:
@@ -258,6 +277,12 @@ def _decode_tick(
 
     carry = (cache, last_token, cur_len, jnp.zeros_like(active))
     (cache, last_token, _, _), toks = jax.lax.scan(one, carry, None, length=steps)
+    if tables is not None:
+        cache = _pin_pool(cache)
+    # only the sampled tokens (and the tiny carry) replicate back to the
+    # host loop — logits/activations stay sharded inside the program
+    toks = _sh_constrain(toks, (None, None))
+    last_token = _sh_constrain(last_token, (None,))
     return cache, toks, last_token          # toks: (steps, N)
 
 
@@ -371,7 +396,12 @@ def _spec_tick(
     cur_len = jnp.where(
         active, jnp.minimum(cur_len + n_acc, max_pos), cur_len
     )
-    return cache, toks.T, n_acc, last_token, cur_len     # toks: (K+1, N)
+    cache = _pin_pool(cache)
+    toks = _sh_constrain(toks.T, (None, None))
+    n_acc = _sh_constrain(n_acc, (None,))
+    last_token = _sh_constrain(last_token, (None,))
+    cur_len = _sh_constrain(cur_len, (None,))
+    return cache, toks, n_acc, last_token, cur_len       # toks: (K+1, N)
 
 
 _spec_tick_jit = _LazyJit(lambda: jax.jit(
@@ -522,9 +552,12 @@ def _admit_fused_paged(
     last = jnp.take_along_axis(
         logits, (prompt_lens - 1)[:, None, None], axis=1
     )[:, 0, :]
-    cache = C.scatter_prompt_blocks(cache, kvs, block_ids, block_size)
+    cache = _pin_pool(C.scatter_prompt_blocks(cache, kvs, block_ids, block_size))
     req_keys = _request_keys(base_key, req_ids)
-    return cache, _first_tokens(last, req_keys, prompt_lens, sampling), req_keys
+    tok0s = _sh_constrain(
+        _first_tokens(last, req_keys, prompt_lens, sampling), (None,)
+    )
+    return cache, tok0s, _sh_constrain(req_keys, (None, None))
 
 
 _admit_fused_paged_jit = _LazyJit(lambda: jax.jit(
@@ -545,8 +578,10 @@ _evict_jit = _LazyJit(lambda: jax.jit(
 def _copy_block(cache, src: jax.Array, dst: jax.Array):
     """Copy-on-write fork (see ``cache.copy_block``): src/dst are traced, so
     one compiled program forks any block pair; warmed by ``warmup()`` when
-    prefix sharing is on so the first real fork never compiles."""
-    return C.copy_block(cache, src, dst)
+    prefix sharing is on so the first real fork never compiles.  The copy is
+    head-local under TP (each shard copies its own Hkv/tp slice), so the
+    pool pin adds no traffic."""
+    return _pin_pool(C.copy_block(cache, src, dst))
 
 
 _copy_block_jit = _LazyJit(lambda: jax.jit(
@@ -567,7 +602,8 @@ def _admit_merge(
     ``tok0s``/``keys`` are usually still in-flight futures of an admit
     program — composing here instead of on the host is what keeps the
     pipeline free of syncs between dispatches."""
-    return C.merge_admit_carry(last_token, slot_keys, slots, tok0s, keys, valid)
+    lt, sk = C.merge_admit_carry(last_token, slot_keys, slots, tok0s, keys, valid)
+    return _sh_constrain(lt, (None,)), _sh_constrain(sk, (None, None))
 
 
 _admit_merge_jit = _LazyJit(lambda: jax.jit(_admit_merge))
@@ -583,10 +619,22 @@ def _spec_merge_len(
     into the device-resident ``cur_len`` carry (see ``cache.merge_spec_len``
     — spec rows advance by data-dependent accepted counts, so the async
     loop keeps ``cur_len`` on device next to the token carry)."""
-    return C.merge_spec_len(cur_len, slots, lens, valid)
+    return _sh_constrain(C.merge_spec_len(cur_len, slots, lens, valid), (None,))
 
 
 _spec_merge_len_jit = _LazyJit(lambda: jax.jit(_spec_merge_len))
+
+# TP placement normalizers (warmup only): pass session state through tiny
+# jitted pins so every program's warmup operands carry exactly the sharding
+# representation their serving-time operands will have — outputs of GSPMD
+# programs under the mesh — instead of the ctor's device_put shardings.
+# Without this, the FIRST program compiled against each state piece would
+# key on the device_put sharding and recompile once at its first real
+# dispatch.
+_pin_carry_jit = _LazyJit(
+    lambda: jax.jit(lambda x: _sh_constrain(x, (None,) * x.ndim))
+)
+_pin_pool_jit = _LazyJit(lambda: jax.jit(_pin_pool))
 
 
 def _jit_cache_size(fn) -> int:
@@ -750,6 +798,25 @@ class SchedulerStats:
                        "draft_tokens — the live end-to-end readout of the "
                        "draft multiplier's error rate (0.0 when spec "
                        "decode is off)",
+        "tp": "tensor-parallel degree: size of the session mesh's "
+              "'model' axis (1 for single-device serving)",
+        "devices": "devices the session mesh spans (1 off-mesh)",
+        "peak_block_bytes_per_device": "paged layout: KV pool bytes "
+                                       "resident on EACH device for the "
+                                       "peak_blocks_in_use blocks — the "
+                                       "pool shards along the KV-head dim "
+                                       "under TP, so this scales as 1/tp "
+                                       "at equal block counts",
+        "draft_k_current": "speculative decoding: the draft window the "
+                           "NEXT spec tick will dispatch — equals the "
+                           "configured draft_k unless dynamic_draft_k "
+                           "shrank/regrew it on the rolling accept rate",
+        "draft_k_shrinks": "speculative decoding: times dynamic_draft_k "
+                           "halved the draft window (rolling accept rate "
+                           "below break-even 1/draft_cost_ratio)",
+        "draft_k_grows": "speculative decoding: times dynamic_draft_k "
+                         "re-grew the draft window (rolling accept rate "
+                         "back at/above break-even)",
     }
 
     ticks: int = 0
@@ -777,6 +844,12 @@ class SchedulerStats:
     draft_tokens: int = 0
     accepted_tokens: int = 0
     verify_calls: int = 0
+    tp: int = 1
+    devices: int = 1
+    peak_block_bytes_per_device: int = 0
+    draft_k_current: int = 0
+    draft_k_shrinks: int = 0
+    draft_k_grows: int = 0
 
     @property
     def accept_rate(self) -> float:
@@ -859,6 +932,9 @@ class _Inflight:
     # speculative chunks only: (N,) device future of per-row accepted
     # counts (the chunk's rows advanced unevenly — see _spec_tick)
     n_acc: Any = None
+    # speculative chunks only: the draft window THIS chunk was dispatched
+    # with (dynamic_draft_k may change _draft_k_eff before the harvest)
+    draft_k: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -943,6 +1019,11 @@ class ServeSession:
         draft_k: int = 4,
         draft_mode: str = "approx",
         draft_multiplier: str = "mul8x8_2",
+        dynamic_draft_k: bool = False,
+        draft_cost_ratio: float = 4.0,
+        draft_window: int = 32,
+        mesh=None,
+        tp_axis: str = "model",
     ):
         if not cfg.embed_input:
             raise ValueError(f"{cfg.name}: token serving requires an embed-input arch")
@@ -998,6 +1079,32 @@ class ServeSession:
                     "so a batched verify would route differently than "
                     "sequential decode and lose the exactness contract"
                 )
+        if dynamic_draft_k:
+            if not spec_decode:
+                raise ValueError("dynamic_draft_k requires spec_decode=True")
+            if draft_cost_ratio <= 1.0:
+                raise ValueError(
+                    "draft_cost_ratio is verify-work / draft-step-work and "
+                    f"must be > 1 (break-even accept rate is its inverse), "
+                    f"got {draft_cost_ratio}"
+                )
+            if draft_window < 1:
+                raise ValueError(f"draft_window must be >= 1, got {draft_window}")
+        if mesh is not None:
+            if tp_axis != "model":
+                raise ValueError(
+                    f"tp_axis must be 'model' (param_pspec/cache_pspecs key "
+                    f"their TP rules on it), got {tp_axis!r}"
+                )
+            if tp_axis not in mesh.axis_names:
+                raise ValueError(
+                    f"mesh has no {tp_axis!r} axis (axes: {mesh.axis_names})"
+                )
+            if cache_layout != "paged":
+                raise ValueError(
+                    "mesh serving shards the paged BlockPool along the "
+                    'KV-head dim — it requires cache_layout="paged"'
+                )
         self.cfg = cfg
         self.params = params
         self.sampling = sampling if sampling is not None else SamplingConfig()
@@ -1013,6 +1120,25 @@ class ServeSession:
         self.prefill_token_budget = prefill_token_budget
         self.spec = bool(spec_decode)
         self.draft_k = int(draft_k)
+        self.dynamic_draft = bool(dynamic_draft_k)
+        self.draft_cost_ratio = float(draft_cost_ratio)
+        self.draft_window = int(draft_window)
+        # halving ladder draft_k -> 1: the rungs dynamic_draft_k may visit.
+        # draft_k is a STATIC jit arg, so warmup() compiles every rung and
+        # adaptation never compiles mid-trace.
+        ks: List[int] = []
+        k = max(1, self.draft_k)
+        while True:
+            ks.append(k)
+            if k == 1:
+                break
+            k //= 2
+        self._draft_ks: Tuple[int, ...] = tuple(ks)
+        self._draft_k_eff = self.draft_k
+        # rolling (drafted, accepted) pairs over the last draft_window live
+        # rows; cleared on every rung change so each rung re-measures a full
+        # window before the next decision
+        self._accept_hist: deque = deque(maxlen=self.draft_window)
         self.draft_mode = draft_mode if self.spec else None
         # the draft model IS the session model with only cfg.approx swapped
         # (shared weights; one extra compiled decode program) — see
@@ -1084,6 +1210,36 @@ class ServeSession:
             self._prefix = None
             self._preempt_resume = {}
             self.cache = init_cache(cfg, num_slots, self.max_len, jnp.dtype(cache_dtype))
+
+        # -- tensor parallelism ----------------------------------------------
+        # Shard params by the param_pspec rules (Megatron column/row split)
+        # and the paged pool along the KV-head dim (cache_pspecs paged
+        # layout); all program dispatches then run under `with mesh:` (see
+        # _mesh_ctx) so constrain() sees the mesh at trace time.
+        self.mesh = mesh
+        self.tp_axis = tp_axis
+        self.tp = int(mesh.shape[tp_axis]) if mesh is not None else 1
+        if mesh is not None:
+            from repro.parallel.sharding import cache_pspecs, param_shardings
+
+            if attn_impl == "pallas":
+                from repro.kernels.paged_attention import validate_tp_heads
+
+                validate_tp_heads(cfg.num_heads, cfg.num_kv_heads, self.tp)
+            self.params = jax.device_put(
+                self.params, param_shardings(cfg, self.params, mesh)
+            )
+            self.cache = jax.device_put(
+                self.cache, cache_pspecs(cfg, mesh, self.cache, layout="paged")
+            )
+        # per-device bytes of ONE pool block (0 for the slot layout): the
+        # peak_block_bytes_per_device gauge and the bench's 1/tp KV-bytes
+        # claim both read it
+        self._block_bytes_dev = (
+            C.pool_bytes_per_device(self.cache) // self.num_blocks
+            if self.layout == "paged" else 0
+        )
+
         self._last_token = np.zeros((num_slots,), np.int32)
         self._cur_len = np.zeros((num_slots,), np.int32)
         self._slot_keys = np.zeros((num_slots, 2), np.uint32)
@@ -1099,7 +1255,12 @@ class ServeSession:
         self._seq = 0
         self._next_id = 0
         self.clock = 0
-        self.stats = SchedulerStats(attn_impl=attn_impl)
+        self.stats = SchedulerStats(
+            attn_impl=attn_impl,
+            tp=self.tp,
+            devices=int(mesh.size) if mesh is not None else 1,
+            draft_k_current=self.draft_k if self.spec else 0,
+        )
         self._completed: Dict[int, CompletedRequest] = {}
         self._just_finished: List[int] = []     # drained by each step()
         # -- async pipeline state --------------------------------------------
@@ -1504,6 +1665,9 @@ class ServeSession:
             self.stats.peak_blocks_in_use = max(
                 self.stats.peak_blocks_in_use, self.blocks.busy_count
             )
+            self.stats.peak_block_bytes_per_device = (
+                self.stats.peak_blocks_in_use * self._block_bytes_dev
+            )
         else:
             if self.prefill_mode == "fused":
                 self.cache, tok0s, req_keys = _admit_fused_jit(
@@ -1794,7 +1958,7 @@ class ServeSession:
         # write span past cur_len: a decode chunk's last accepted write
         # lands at cur_len + steps - 1; a speculative tick's verify writes
         # through cur_len + draft_k (see _spec_tick)
-        span = self.draft_k if self.spec else steps - 1
+        span = self._draft_k_eff if self.spec else steps - 1
         if self.layout == "paged":
             bs = self.block_size
             for slot, state in enumerate(self._active):
@@ -1826,6 +1990,9 @@ class ServeSession:
                 self._ensure_blocks(slot, hi)
             self.stats.peak_blocks_in_use = max(
                 self.stats.peak_blocks_in_use, self.blocks.busy_count
+            )
+            self.stats.peak_block_bytes_per_device = (
+                self.stats.peak_blocks_in_use * self._block_bytes_dev
             )
             tables = self._tables.copy()
             block_size = self.block_size
@@ -1880,6 +2047,7 @@ class ServeSession:
         toks: np.ndarray,          # (draft_k + 1, N)
         n_acc: np.ndarray,         # (N,)
         work_end: int,
+        draft_k: int,
     ) -> None:
         """Speculative counterpart of ``_accept_chunk``: each live row takes
         its own ``n_acc`` tokens (1..draft_k+1 — uneven per row), finishing
@@ -1888,10 +2056,13 @@ class ServeSession:
         accept-rate counters meter the draft multiplier's hit rate
         (``n_acc - 1`` drafted tokens survived the exact verifier, clipped
         to what the row could still emit so end-of-request truncation never
-        inflates the readout)."""
+        inflates the readout).  ``draft_k`` is the window the CHUNK was
+        dispatched with (dynamic_draft_k may have moved ``_draft_k_eff``
+        since), and each live row also feeds the rolling accept window the
+        adaptation rule reads."""
         eos = self.sampling.eos_id
         accepted = 0
-        cap = self.draft_k + 1
+        cap = draft_k + 1
         for slot, state in enumerate(states):
             if state is None or state.done or state.preempted:
                 # preempted rows discard their in-flight tokens (counted
@@ -1900,7 +2071,7 @@ class ServeSession:
             early = state.released
             na = int(n_acc[slot])
             self.stats.verify_calls += 1
-            self.stats.draft_tokens += self.draft_k
+            self.stats.draft_tokens += draft_k
             emitted = 0
             for s in range(na):
                 tok = int(toks[s, slot])
@@ -1914,6 +2085,8 @@ class ServeSession:
                     self._finish(state, "length")
                     break
             self.stats.accepted_tokens += max(0, min(na - 1, emitted))
+            if self.dynamic_draft:
+                self._accept_hist.append((draft_k, max(0, min(na - 1, emitted))))
             if not early:
                 gap = int(work_end - self._last_emit_work[slot])
                 if gap > self.stats.max_decode_gap_ticks:
@@ -1922,6 +2095,38 @@ class ServeSession:
         self.stats.busy_slot_steps += accepted
         self.stats.idle_slot_steps += self.num_slots * cap - accepted
         self.stats.generated_tokens += accepted
+        if self.dynamic_draft:
+            self._update_draft_k()
+
+    def _update_draft_k(self) -> None:
+        """dynamic_draft_k adaptation rule (applies to the NEXT dispatch).
+
+        A drafted token costs ``1/draft_cost_ratio`` of a verify position,
+        so drafting pays iff the accept rate is at least the break-even
+        ``1/draft_cost_ratio``.  Over a full rolling window of per-row
+        (drafted, accepted) pairs: strictly below break-even -> halve the
+        window (next rung down the warmed ladder); at/above break-even ->
+        re-grow one rung.  The window clears on every change, so each rung
+        is measured on a full window of its own chunks before the next
+        move — that hysteresis is the regression-pinned contract
+        (tests/test_specdec.py)."""
+        if len(self._accept_hist) < self.draft_window:
+            return
+        drafted = sum(d for d, _ in self._accept_hist)
+        acc = sum(a for _, a in self._accept_hist)
+        if not drafted:
+            return
+        rate = acc / drafted
+        i = self._draft_ks.index(self._draft_k_eff)
+        if rate < 1.0 / self.draft_cost_ratio and i + 1 < len(self._draft_ks):
+            self._draft_k_eff = self._draft_ks[i + 1]
+            self.stats.draft_k_shrinks += 1
+            self._accept_hist.clear()
+        elif rate >= 1.0 / self.draft_cost_ratio and i > 0:
+            self._draft_k_eff = self._draft_ks[i - 1]
+            self.stats.draft_k_grows += 1
+            self._accept_hist.clear()
+        self.stats.draft_k_current = self._draft_k_eff
 
     def step(self) -> List[CompletedRequest]:
         """Admit what fits (under the interleaving budget), run one decode
@@ -1935,11 +2140,20 @@ class ServeSession:
             )
         t0 = time.perf_counter()
         try:
-            if self.loop == "async":
-                return self._step_async()
-            return self._step_sync()
+            with self._mesh_ctx():
+                if self.loop == "async":
+                    return self._step_async()
+                return self._step_sync()
         finally:
             self.stats.wall_s += time.perf_counter() - t0
+
+    def _mesh_ctx(self):
+        """Every device dispatch runs under ``with mesh:`` when the session
+        is tensor-parallel — ``constrain()`` and GSPMD read the mesh from the
+        thread-resource env at trace time, and the mesh context is part of
+        the jit cache key, so warmup and serving must install the SAME
+        context for the zero-recompile contract to hold."""
+        return self.mesh if self.mesh is not None else contextlib.nullcontext()
 
     def _step_sync(self) -> List[CompletedRequest]:
         """PR-3 strictly-alternating loop: dispatch one chunk, block on its
@@ -1958,12 +2172,13 @@ class ServeSession:
 
         active, tables, block_size, steps = self._chunk_inputs()
         if self.spec:
+            k = self._draft_k_eff
             self.cache, toks, n_acc, _, _ = _spec_tick_jit(
                 cfg=self.cfg, draft_cfg=self.draft_cfg, params=self.params,
                 cache=self.cache, last_token=self._last_token,
                 cur_len=self._cur_len, active=active,
                 slot_keys=self._slot_keys, tables=tables,
-                sampling=self.sampling, draft_k=self.draft_k,
+                sampling=self.sampling, draft_k=k,
                 block_size=block_size, attn_impl=self.attn_impl,
             )
             tb = time.perf_counter()
@@ -1974,10 +2189,10 @@ class ServeSession:
             # draft_k + 1 token-steps' worth of work
             self.clock += 1
             self.stats.ticks += 1
-            self.stats.work_ticks += self.draft_k + 1
+            self.stats.work_ticks += k + 1
 
             states = list(self._active)
-            self._accept_spec_chunk(states, toks, n_acc, self.stats.work_ticks)
+            self._accept_spec_chunk(states, toks, n_acc, self.stats.work_ticks, k)
             for slot, state in enumerate(states):
                 if state is None:
                     continue
@@ -2061,22 +2276,24 @@ class ServeSession:
                 # only learns at harvest.  _cur_len meanwhile tracks the
                 # conservative upper bound (full draft_k + 1 per live
                 # row), which is all block allocation needs.
+                k = self._draft_k_eff
                 (self.cache, toks_f, n_acc_f, self._lt_dev,
                  self._cl_dev) = _spec_tick_jit(
                     cfg=self.cfg, draft_cfg=self.draft_cfg,
                     params=self.params, cache=self.cache,
                     last_token=self._lt_dev, cur_len=self._cl_dev,
                     active=active, slot_keys=self._sk_dev, tables=tables,
-                    sampling=self.sampling, draft_k=self.draft_k,
+                    sampling=self.sampling, draft_k=k,
                     block_size=block_size, attn_impl=self.attn_impl,
                 )
                 self.clock += 1
                 self.stats.ticks += 1
-                self.stats.work_ticks += self.draft_k + 1
+                self.stats.work_ticks += k + 1
                 new = _Inflight(toks_f, 1, list(self._active),
-                                self.stats.work_ticks, n_acc=n_acc_f)
+                                self.stats.work_ticks, n_acc=n_acc_f,
+                                draft_k=k)
                 self._cur_len = np.minimum(
-                    self._cur_len + (self.draft_k + 1) * active,
+                    self._cur_len + (k + 1) * active,
                     self.max_len - 1,
                 ).astype(np.int32)
             else:
@@ -2165,9 +2382,9 @@ class ServeSession:
             )
             ub = int(self._cl_true[slot])
             if self._inflight is not None and self._inflight.states[slot] is state:
-                ub += self.draft_k + 1           # the still-in-flight chunk
+                ub += self._inflight.draft_k + 1  # the still-in-flight chunk
             self._cur_len[slot] = min(ub, self.max_len - 1)
-        self._accept_spec_chunk(fl.states, toks, n_acc, fl.work_end)
+        self._accept_spec_chunk(fl.states, toks, n_acc, fl.work_end, fl.draft_k)
 
     def close(self) -> Dict[int, CompletedRequest]:
         """Flush the pipeline (harvest the in-flight chunk and any pending
@@ -2178,7 +2395,8 @@ class ServeSession:
         if not self._closed:
             fl, self._inflight = self._inflight, None
             if fl is not None:
-                self._harvest(fl)
+                with self._mesh_ctx():
+                    self._harvest(fl)
             self._closed = True
         return dict(self._completed)
 
@@ -2214,6 +2432,18 @@ class ServeSession:
         cache-donating programs consume their input buffers on non-CPU
         backends.  After this, no request pattern recompiles; returns
         ``compile_stats``."""
+        with self._mesh_ctx():
+            return self._warmup_impl()
+
+    def _warmup_impl(self) -> Dict[str, int]:
+        if self.mesh is not None:
+            # normalize placements (see _pin_carry_jit): every later warmup
+            # and serving dispatch then sees identical operand shardings
+            self.cache = _pin_pool_jit(self.cache)
+            self._lt_dev = _pin_carry_jit(self._lt_dev)
+            self._sk_dev = _pin_carry_jit(self._sk_dev)
+            self._cl_dev = _pin_carry_jit(self._cl_dev)
+            self._base_key = _pin_carry_jit(self._base_key)
         widths = sorted({self._admit_width(n) for n in range(1, self.num_slots + 1)})
         for A in widths:
             for b in self.buckets.sizes:
@@ -2254,10 +2484,14 @@ class ServeSession:
             # and keys are jnp arrays on purpose: the real calls pass admit-
             # program futures, and the jit cache keys numpy and jax.Array
             # operands separately even at identical avals
+            t0w, kw = jnp.zeros((A,), jnp.int32), jnp.zeros((A, 2), jnp.uint32)
+            if self.mesh is not None:
+                # under the mesh, match the real futures' shardings exactly:
+                # use the admit program's own (no-op) outputs
+                t0w, kw = out[1], out[2]
             self._lt_dev, self._sk_dev = _admit_merge_jit(
                 self._lt_dev, self._sk_dev, np.arange(A, dtype=np.int32),
-                jnp.zeros((A,), jnp.int32), jnp.zeros((A, 2), jnp.uint32),
-                np.zeros((A,), bool),
+                t0w, kw, np.zeros((A,), bool),
             )
             if self.spec and self.loop == "async":
                 # the spec length-carry merge compiles once per admit
@@ -2274,21 +2508,25 @@ class ServeSession:
         # the decode tick, never both
         dev_carry = self.loop == "async"
         if self.spec:
-            out = _spec_tick_jit(
-                cfg=self.cfg, draft_cfg=self.draft_cfg, params=self.params,
-                cache=self.cache,
-                last_token=self._lt_dev if dev_carry else self._last_token,
-                cur_len=self._cl_dev if dev_carry else self._cur_len.copy(),
-                active=np.zeros((self.num_slots,), bool),
-                slot_keys=self._sk_dev if dev_carry else self._slot_keys,
-                tables=self._tables.copy(),
-                sampling=self.sampling, draft_k=self.draft_k,
-                block_size=self.block_size, attn_impl=self.attn_impl,
-            )
-            jax.block_until_ready(out)
-            self.cache = out[0]
-            if dev_carry:
-                self._lt_dev, self._cl_dev = out[3], out[4]
+            # dynamic_draft_k: draft_k is a STATIC jit arg, so warm every
+            # rung of the halving ladder — adaptation then switches between
+            # already-compiled programs and never compiles mid-trace
+            for dk in (self._draft_ks if self.dynamic_draft else (self.draft_k,)):
+                out = _spec_tick_jit(
+                    cfg=self.cfg, draft_cfg=self.draft_cfg, params=self.params,
+                    cache=self.cache,
+                    last_token=self._lt_dev if dev_carry else self._last_token,
+                    cur_len=self._cl_dev if dev_carry else self._cur_len.copy(),
+                    active=np.zeros((self.num_slots,), bool),
+                    slot_keys=self._sk_dev if dev_carry else self._slot_keys,
+                    tables=self._tables.copy(),
+                    sampling=self.sampling, draft_k=dk,
+                    block_size=self.block_size, attn_impl=self.attn_impl,
+                )
+                jax.block_until_ready(out)
+                self.cache = out[0]
+                if dev_carry:
+                    self._lt_dev, self._cl_dev = out[3], out[4]
         else:
             out = _decode_tick_jit(
                 cfg=self.cfg, params=self.params, cache=self.cache,

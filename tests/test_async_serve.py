@@ -136,6 +136,9 @@ def test_stats_field_docs_complete():
     # PR-7 speculative-decoding readouts are part of the bench contract
     assert {"draft_tokens", "accepted_tokens", "verify_calls",
             "accept_rate"} <= documented
+    # PR-8 tensor-parallel + dynamic-draft readouts
+    assert {"tp", "devices", "peak_block_bytes_per_device",
+            "draft_k_current", "draft_k_shrinks", "draft_k_grows"} <= documented
 
 
 # ---------------------------------------------------------------------------

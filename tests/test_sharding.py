@@ -97,3 +97,75 @@ def test_small_mesh_dryrun_subprocess(tmp_path):
     assert out.returncode == 0, out.stderr[-2000:]
     res = json.loads(out.stdout.strip().splitlines()[-1])
     assert res["ok"] and res["collectives"]
+
+
+def test_constrain_and_cache_pspecs_subprocess():
+    """``constrain`` / ``cache_pspecs`` semantics on a real forced 8-device
+    mesh: divisibility fallback, missing-axis drop, ``"batch"`` resolution to
+    the (pod, data) pair, and the paged-pool head-dim sharding."""
+    script = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import dataclasses, json
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import get_config, reduced_config
+        from repro.models.transformer import init_paged_cache
+        from repro.parallel.sharding import cache_pspecs, constrain
+
+        def spec_of(x):
+            return tuple(x.sharding.spec) if isinstance(
+                x.sharding, NamedSharding) else None
+
+        out = {}
+        f = jax.jit(lambda x: constrain(x, ("batch", None, "model")))
+
+        # no mesh context: constrain is a no-op, jit still compiles
+        out["no_mesh"] = spec_of(f(jnp.zeros((8, 4, 8)))) is None
+
+        # pure-TP mesh: no pod/data axes -> "batch" drops; "model" applies
+        with jax.make_mesh((4,), ("model",)):
+            y = f(jnp.zeros((8, 4, 8)))
+            out["tp_only"] = spec_of(y) == (None, None, "model")
+            # divisibility fallback: 6 % 4 != 0 -> trailing axis dropped
+            # (fully replicated normalizes to the empty spec)
+            z = f(jnp.zeros((8, 4, 6)))
+            out["indivisible"] = spec_of(z) in ((), (None, None, None))
+
+        # pod x data x model mesh: "batch" -> ("pod", "data")
+        with jax.make_mesh((2, 2, 2), ("pod", "data", "model")):
+            y = f(jnp.zeros((8, 4, 8)))
+            out["batch_pair"] = spec_of(y) == (("pod", "data"), None, "model")
+
+        # paged cache_pspecs: k/v shard dim 3 (Hkv) over "model"; block
+        # tables / metadata and the block dim stay replicated
+        cfg = dataclasses.replace(
+            reduced_config(get_config("granite-3-2b")),
+            num_layers=2, num_heads=4, num_kv_heads=4, head_dim=16,
+        )
+        cache = init_paged_cache(cfg, num_blocks=16, block_size=8)
+        mesh = jax.make_mesh((4,), ("model",))
+        sh = cache_pspecs(cfg, mesh, cache, layout="paged")
+        out["paged_kv"] = tuple(sh["k"].spec) == (None, None, None, "model", None)
+        out["paged_v"] = tuple(sh["v"].spec) == (None, None, None, "model", None)
+
+        # Hkv not divisible by tp -> replicate rather than mis-shard
+        cfg3 = dataclasses.replace(cfg, num_heads=3, num_kv_heads=3)
+        cache3 = init_paged_cache(cfg3, num_blocks=16, block_size=8)
+        sh3 = cache_pspecs(cfg3, mesh, cache3, layout="paged")
+        out["paged_fallback"] = all(
+            ax is None for ax in sh3["k"].spec) and all(
+            ax is None for ax in sh3["v"].spec)
+        print(json.dumps(out))
+        """
+    )
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))), timeout=420,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert all(res.values()), {k: v for k, v in res.items() if not v}

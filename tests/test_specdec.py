@@ -391,3 +391,87 @@ def test_serve_specdec_bench_smoke():
     assert r["exact_draft_accept_rate"] == 1.0
     assert set(r["field_docs"]) >= {"draft_tokens", "accepted_tokens",
                                     "verify_calls", "accept_rate"}
+
+
+# ---------------------------------------------------------------------------
+# PR-8: dynamic draft_k (rolling accept rate vs break-even 1/draft_cost_ratio)
+# ---------------------------------------------------------------------------
+
+
+def test_dynamic_draft_k_validation():
+    cfg = _cfg()
+    with pytest.raises(ValueError, match="spec_decode"):
+        ServeSession(cfg, _params(cfg), cache_layout="paged", block_size=4,
+                     max_len=32, prompt_buckets=(4, 8), dynamic_draft_k=True)
+    with pytest.raises(ValueError, match="draft_cost_ratio"):
+        _spec_session(cfg, dynamic_draft_k=True, draft_cost_ratio=1.0)
+    with pytest.raises(ValueError, match="draft_window"):
+        _spec_session(cfg, dynamic_draft_k=True, draft_window=0)
+
+
+def test_dynamic_draft_k_shrink_threshold():
+    """Regression pin for the shrink rule: the window shrinks exactly when
+    the rolling accept rate is STRICTLY below break-even
+    ``1/draft_cost_ratio``, re-grows at/above it, and the rolling window
+    clears on every rung change (hysteresis)."""
+    cfg = _cfg()
+    sess = _spec_session(cfg, draft_k=4, dynamic_draft_k=True,
+                         draft_cost_ratio=4.0, draft_window=4)
+    assert sess._draft_ks == (4, 2, 1)
+    assert sess._draft_k_eff == 4
+
+    def feed(pairs):
+        sess._accept_hist.clear()
+        sess._accept_hist.extend(pairs)
+        sess._update_draft_k()
+
+    # short window: no decision yet
+    feed([(4, 0)] * 3)
+    assert sess._draft_k_eff == 4 and sess.stats.draft_k_shrinks == 0
+
+    # rate exactly at break-even (4/16 = 1/4): hold at the top rung
+    feed([(4, 1)] * 4)
+    assert sess._draft_k_eff == 4 and sess.stats.draft_k_shrinks == 0
+
+    # one accepted token fewer (3/16 < 1/4): shrink 4 -> 2, window cleared
+    feed([(4, 1)] * 3 + [(4, 0)])
+    assert sess._draft_k_eff == 2
+    assert sess.stats.draft_k_shrinks == 1
+    assert len(sess._accept_hist) == 0
+    assert sess.stats.draft_k_current == 2
+
+    # still below break-even: shrink to the floor rung and stay there
+    feed([(2, 0)] * 4)
+    assert sess._draft_k_eff == 1 and sess.stats.draft_k_shrinks == 2
+    feed([(1, 0)] * 4)
+    assert sess._draft_k_eff == 1 and sess.stats.draft_k_shrinks == 2
+
+    # at/above break-even: climb back one rung per full window
+    feed([(1, 1)] * 4)
+    assert sess._draft_k_eff == 2 and sess.stats.draft_k_grows == 1
+    feed([(2, 2)] * 4)
+    assert sess._draft_k_eff == 4 and sess.stats.draft_k_grows == 2
+    assert sess.stats.draft_k_current == 4
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("loop", ["sync", "async"])
+def test_dynamic_draft_k_end_to_end(loop):
+    """A lossy draft under a tight window must actually shrink the live
+    draft_k, while the emitted tokens stay bit-identical to the
+    non-speculative oracle (shrinking only changes chunking, never
+    tokens)."""
+    cfg = _cfg()
+    prompts = _mixed_prompts(n=4, seed=5)
+    oracle = _oracle(cfg, prompts, max_new=12)
+    # break-even ~0.95: any lossy draft sits below it, forcing shrinks
+    sess = _spec_session(cfg, loop=loop, draft_k=4, dynamic_draft_k=True,
+                         draft_cost_ratio=1.05, draft_window=2)
+    sess.warmup()
+    ids = [sess.submit(p, max_new=12, req_id=i)
+           for i, p in enumerate(prompts)]
+    res = sess.run(max_steps=10_000)
+    assert sess.drained
+    assert {i: res[i].tokens.tolist() for i in ids} == oracle
+    assert sess.stats.draft_k_shrinks >= 1
+    assert sess.stats.draft_k_current < 4
