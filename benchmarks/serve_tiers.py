@@ -1,0 +1,290 @@
+"""Load-adaptive quality-tier serving: the MSR/approx execution-mode ladder
+under a load spike, measured against the exact-only baseline.
+
+Every arm serves the SAME burst trace (all arrivals at tick 0 — the spike)
+through ``repro.serve.scheduler.ServeSession`` (paged layout, identical
+buckets/pool/slots, greedy):
+
+* **exact_only** — no tiers: every request decodes through the exact float
+  path; this arm is also the per-request quality oracle.
+* **static_tiers** — ``tiers=TIERS`` with requests PINNED round-robin to
+  rungs; no shedder.  This arm measures per-tier output quality: for each
+  rung, the mean positionwise token-match fraction of its requests against
+  the exact_only arm's outputs for the same request ids.  The ``exact``
+  rung must read 1.0 exactly (mixed-tier batching is bit-transparent).
+* **shed** — ``tiers=TIERS`` with every request submitted at the best rung
+  and the load-adaptive shedder armed (``shed_queue_depth``): under the
+  spike the scheduler demotes new admissions down the ladder, then restores
+  after the hysteresis hold once the queue drains.
+
+Throughput is reported two ways, because the container has no approximate
+hardware:
+
+* ``wall_tok_s`` — useful tokens / wall seconds on this host (the MSR rung
+  runs the Pallas kernel in interpret mode off-TPU, so wall numbers
+  UNDERSTATE the approximate rungs);
+* ``modeled_mac_tok_per_us`` — useful tokens / Sum_tokens(delay_ns of the
+  serving rung's multiplier) * 1e3, the MAC-critical-path-limited
+  throughput on the modeled accelerator (``repro.core.hwcost.COST_TABLE``:
+  paper Table VII rows + unit-gate estimates for the MSR family).  Each
+  token is costed at the delay of the rung it was actually served at, so
+  shedder demotions translate directly into modeled headroom.
+
+The JSON artifact (``BENCH_serve_tiers.json``) records per-arm wall and
+modeled throughput, per-tier quality and token counts, the shed arm's
+demotion/restoration counts, the recompile count across the timed passes
+(must be 0), and ``SchedulerStats.DOCS`` under ``field_docs``.  The gate:
+the shed arm must sustain HIGHER modeled throughput than exact_only under
+the spike, with zero recompiles and exact-rung quality == 1.0.
+
+    PYTHONPATH=src python benchmarks/serve_tiers.py
+    PYTHONPATH=src python benchmarks/serve_tiers.py --smoke --out /tmp/b.json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import numpy as np
+
+BUCKETS = (8, 16)
+NEW_CHOICES = (4, 6, 8)
+MAX_LEN = 32
+BLOCK_SIZE = 8
+TIERS = ("exact", "approx_lowrank", "approx_msr")
+TIER_MULTIPLIER = "mul8x8_2"
+
+
+def _tiny_cfg():
+    from repro.configs import get_config, reduced_config
+    from repro.serve.engine import resolve_execution_mode
+
+    cfg = dataclasses.replace(
+        reduced_config(get_config("granite-3-2b")),
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=2, head_dim=32,
+        d_ff=256, vocab_size=512, remat=False, q_chunk=32, dtype="float32",
+    )
+    return dataclasses.replace(cfg, approx=resolve_execution_mode("exact"))
+
+
+def tier_delay_ns(tier: str) -> float:
+    """Modeled MAC critical path for a rung: the COST_TABLE delay of the
+    multiplier that rung actually routes to (exact rungs cost the exact
+    row; '' — a no-tiers session — is the exact path)."""
+    from repro.core.hwcost import COST_TABLE
+    from repro.serve.engine import resolve_execution_mode
+
+    if not tier:
+        return COST_TABLE["exact"].delay_ns
+    acfg = resolve_execution_mode(tier, TIER_MULTIPLIER)
+    name = "exact" if acfg.mode in ("float", "exact_quant") else acfg.multiplier
+    return COST_TABLE[name].delay_ns
+
+
+def build_trace(n: int, vocab: int, seed: int = 0):
+    """[(prompt, max_new)] — mixed prompt lengths under the bucket set; the
+    arms submit every request at arrival tick 0 (the spike)."""
+    rng = np.random.default_rng(seed)
+    trace = []
+    for _ in range(n):
+        prompt = rng.integers(0, vocab,
+                              int(rng.integers(2, BUCKETS[-1] + 1))).astype(np.int32)
+        trace.append((prompt, int(NEW_CHOICES[rng.integers(len(NEW_CHOICES))])))
+    return trace
+
+
+def run_arm(cfg, params, trace, *, tiers=None, pin_tiers: bool = False,
+            shed_queue_depth=None, shed_hold_steps: int = 6,
+            num_slots: int = 4):
+    """Warm pass (compiles every rung's decode tick + prefill programs),
+    then a timed fresh-session pass.  Returns
+    (tok/s, results, stats, recompiles, seconds)."""
+    from repro.serve.scheduler import ServeSession, scheduler_compile_stats
+
+    def serve():
+        sess = ServeSession(
+            cfg, params, num_slots=num_slots, max_len=MAX_LEN,
+            prompt_buckets=BUCKETS, cache_layout="paged",
+            block_size=BLOCK_SIZE, tiers=tiers,
+            tier_multiplier=TIER_MULTIPLIER,
+            shed_queue_depth=shed_queue_depth,
+            shed_hold_steps=shed_hold_steps,
+        )
+        for i, (p, n) in enumerate(trace):
+            tier = tiers[i % len(tiers)] if pin_tiers else None
+            sess.submit(p, max_new=n, arrival=0, req_id=i, tier=tier)
+        sess.run()
+        return sess
+
+    warm = serve()
+    warm.warmup()                            # any program the trace missed
+    before = scheduler_compile_stats()
+    t0 = time.perf_counter()
+    sess = serve()
+    dt = time.perf_counter() - t0
+    recompiles = sum(scheduler_compile_stats().values()) - sum(before.values())
+    useful = sum(len(r.tokens) for r in sess.results.values())
+    return useful / dt, sess.results, sess.stats, recompiles, dt
+
+
+def modeled_tok_per_us(results) -> float:
+    """Useful tokens per microsecond of modeled MAC critical-path time:
+    every token is costed at the delay of the rung it was served at."""
+    ns = sum(len(r.tokens) * tier_delay_ns(r.tier) for r in results.values())
+    toks = sum(len(r.tokens) for r in results.values())
+    return toks / ns * 1e3 if ns else 0.0
+
+
+def _match_fraction(got, oracle) -> float:
+    got, oracle = list(got), list(oracle)
+    n = max(len(got), len(oracle))
+    if n == 0:
+        return 1.0
+    m = min(len(got), len(oracle))
+    return sum(int(a == b) for a, b in zip(got[:m], oracle[:m])) / n
+
+
+def bench(requests: int = 24, num_slots: int = 4, seed: int = 0,
+          shed_queue_depth: int = 4):
+    from repro.models.transformer import init_params
+    from repro.serve.scheduler import SchedulerStats
+
+    cfg = _tiny_cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    trace = build_trace(requests, cfg.vocab_size, seed=seed)
+
+    base_tps, base_res, base_st, base_rc, base_dt = run_arm(
+        cfg, params, trace, num_slots=num_slots)
+    static_tps, static_res, static_st, static_rc, static_dt = run_arm(
+        cfg, params, trace, tiers=TIERS, pin_tiers=True, num_slots=num_slots)
+    shed_tps, shed_res, shed_st, shed_rc, shed_dt = run_arm(
+        cfg, params, trace, tiers=TIERS, shed_queue_depth=shed_queue_depth,
+        num_slots=num_slots)
+
+    quality = {}
+    for t in TIERS:
+        fr = [_match_fraction(r.tokens, base_res[rid].tokens)
+              for rid, r in static_res.items() if r.tier == t]
+        quality[t] = {
+            "requests": len(fr),
+            "token_match_fraction": round(float(np.mean(fr)), 4) if fr else None,
+            "modeled_delay_ns": tier_delay_ns(t),
+        }
+    shed_tier_tokens = {t: 0 for t in TIERS}
+    for r in shed_res.values():
+        shed_tier_tokens[r.tier] += len(r.tokens)
+
+    base_model = modeled_tok_per_us(base_res)
+    shed_model = modeled_tok_per_us(shed_res)
+    return {
+        "bench": "serve_tiers",
+        "requests": requests,
+        "seed": seed,
+        "tiers": list(TIERS),
+        "tier_multiplier": TIER_MULTIPLIER,
+        "prompt_buckets": list(BUCKETS),
+        "max_new_choices": list(NEW_CHOICES),
+        "max_len": MAX_LEN,
+        "block_size": BLOCK_SIZE,
+        "num_slots": num_slots,
+        "shed_queue_depth": shed_queue_depth,
+        "useful_tokens": sum(len(r.tokens) for r in base_res.values()),
+        "arms": {
+            "exact_only": {
+                "wall_tok_s": round(base_tps, 1),
+                "modeled_mac_tok_per_us": round(base_model, 4),
+                "ticks": base_st.ticks,
+                "seconds": round(base_dt, 4),
+            },
+            "static_tiers": {
+                "wall_tok_s": round(static_tps, 1),
+                "modeled_mac_tok_per_us": round(
+                    modeled_tok_per_us(static_res), 4),
+                "ticks": static_st.ticks,
+                "seconds": round(static_dt, 4),
+                "quality_vs_exact_oracle": quality,
+            },
+            "shed": {
+                "wall_tok_s": round(shed_tps, 1),
+                "modeled_mac_tok_per_us": round(shed_model, 4),
+                "modeled_speedup_vs_exact": round(
+                    shed_model / base_model, 3) if base_model else None,
+                "ticks": shed_st.ticks,
+                "seconds": round(shed_dt, 4),
+                "tier_demotions": shed_st.tier_demotions,
+                "tier_restorations": shed_st.tier_restorations,
+                "shed_level_final": shed_st.shed_level,
+                "tokens_per_tier": shed_tier_tokens,
+            },
+        },
+        "recompiles_after_warmup": base_rc + static_rc + shed_rc,
+        "field_docs": dict(SchedulerStats.DOCS),
+    }
+
+
+def run(requests: int = 24):
+    """benchmarks/run.py entry: (name, us_per_call, derived) rows."""
+    r = bench(requests=requests)
+    rows = []
+    for name, arm in r["arms"].items():
+        rows.append((
+            f"serve/tiers_{name}", 1e6 / arm["wall_tok_s"],
+            f"{arm['wall_tok_s']} tok/s wall, "
+            f"{arm['modeled_mac_tok_per_us']} tok/us modeled, "
+            f"recompiles={r['recompiles_after_warmup']}",
+        ))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--num-slots", type=int, default=4)
+    ap.add_argument("--shed-queue-depth", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="miniature trace: exercises every arm and gate "
+                         "without the full spike (CI gate for the harness)")
+    ap.add_argument("--out", default="BENCH_serve_tiers.json")
+    args = ap.parse_args()
+    if args.smoke:
+        args.requests = min(args.requests, 9)
+        args.shed_queue_depth = min(args.shed_queue_depth, 2)
+    r = bench(requests=args.requests, num_slots=args.num_slots,
+              seed=args.seed, shed_queue_depth=args.shed_queue_depth)
+    with open(args.out, "w") as f:
+        json.dump(r, f, indent=2)
+        f.write("\n")
+    print(json.dumps({k: v for k, v in r.items() if k != "field_docs"},
+                     indent=2))
+    failures = []
+    arms = r["arms"]
+    if r["recompiles_after_warmup"]:
+        failures.append(f"{r['recompiles_after_warmup']} recompiles after warmup")
+    q = arms["static_tiers"]["quality_vs_exact_oracle"]
+    if q["exact"]["token_match_fraction"] != 1.0:
+        failures.append(
+            f"exact-rung quality {q['exact']['token_match_fraction']} != 1.0 "
+            "— mixed-tier batching is not bit-transparent")
+    for t, row in q.items():
+        f_ = row["token_match_fraction"]
+        if f_ is None or not (0.0 <= f_ <= 1.0):
+            failures.append(f"tier {t}: degenerate quality readout {f_}")
+    if arms["shed"]["tier_demotions"] == 0:
+        failures.append("spike never triggered the shedder")
+    if arms["shed"]["modeled_mac_tok_per_us"] <= \
+            arms["exact_only"]["modeled_mac_tok_per_us"]:
+        failures.append(
+            "shed arm modeled throughput "
+            f"{arms['shed']['modeled_mac_tok_per_us']} <= exact_only "
+            f"{arms['exact_only']['modeled_mac_tok_per_us']}")
+    for msg in failures:
+        print(f"FAIL: {msg}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -41,12 +41,17 @@ Modes = ("float", "exact_quant", "lut", "lowrank", "pallas")
 class ApproxConfig:
     """Static (hashable) configuration of the approximate-multiplier feature."""
 
-    multiplier: str = "mul8x8_2"       # exact | mul8x8_1/2/3 | pkm | etm
+    multiplier: str = "mul8x8_2"       # exact | mul8x8_1/2/3 | pkm | etm | mul8x8_msr*
     mode: str = "lowrank"              # one of Modes
     act_qmax: int = 255                # activation code band (paper: inputs in (0,31) -> 31)
     w_qmax: int = 255                  # weight code band (co-optimized: 31)
     w_per_channel: bool = True         # per-output-channel weight scales
     band_reg: float = 0.0              # weight band-regularizer strength (retraining)
+    act_per_row: bool = False          # per-row (per-token) activation scales:
+    #   each flattened (M, K) row calibrates independently, so a row's codes
+    #   (and therefore its outputs) do not depend on which other rows share
+    #   the batch — required for bit-identical mixed-tier serving, where
+    #   rows of one batch run under different tier configs across ticks.
 
     def __post_init__(self):
         if self.mode not in Modes:
@@ -138,7 +143,9 @@ def _lowrank_matmul(a_codes: jax.Array, b_codes: jax.Array, cfg: ApproxConfig) -
     out = _bf16_dot(a_codes, b_codes)
     for f in corr.features:
         va = lr.v_map_jnp(a_codes, f.v_terms)                     # lhs tables
-        ub = lr.u_map_jnp(b_codes, f.kind, f.u_shift, f.u_bits, f.residue)
+        ub = lr.u_map_jnp(
+            b_codes, f.kind, f.u_shift, f.u_bits, f.residue, f.u_terms
+        )
         out = out - _bf16_dot(va, ub)
     return out
 
@@ -246,7 +253,8 @@ def approx_dense(x: jax.Array, w: jax.Array, cfg: ApproxConfig) -> jax.Array:
         ).astype(x.dtype)
     sg = jax.lax.stop_gradient
     x2 = x.reshape(-1, x.shape[-1])
-    qp_x = calibrate(sg(x2), qmax=cfg.act_qmax)
+    qp_x = calibrate(sg(x2), axis=(1,) if cfg.act_per_row else None,
+                     qmax=cfg.act_qmax)
     qp_w = calibrate(sg(w), axis=(0,) if cfg.w_per_channel else None, qmax=cfg.w_qmax)
     qx = quantize(sg(x2), qp_x)                   # (M, K) uint8
     qw = quantize(sg(w), qp_w)                    # (K, N) uint8
@@ -279,7 +287,8 @@ def _approx_dense_frozen(x: jax.Array, w: QWeight, cfg: ApproxConfig) -> jax.Arr
     """Inference dense against frozen uint8 weight codes (no calibration of
     w, no STE dot; gradient-free — serving path)."""
     x2 = x.reshape(-1, x.shape[-1])
-    qp_x = calibrate(x2, qmax=cfg.act_qmax)
+    qp_x = calibrate(x2, axis=(1,) if cfg.act_per_row else None,
+                     qmax=cfg.act_qmax)
     qx = quantize(x2, qp_x)
     raw = quantized_matmul(qx, w.codes, cfg).astype(jnp.float32)
     K = x2.shape[-1]

@@ -51,12 +51,18 @@ __all__ = [
 ]
 
 
-def u_map_jnp(x, kind: str, shift: int, bits: int, residue: int):
-    """Indicator/linear feature map as pure shift/mask/compare jnp ops
-    (f32 out; no gathers — shared by the Pallas kernel and the XLA path)."""
+def u_map_jnp(x, kind: str, shift: int, bits: int, residue: int, u_terms=()):
+    """Indicator/linear/lut feature map as pure shift/mask/compare jnp ops
+    (f32 out; no gathers — shared by the Pallas kernel and the XLA path).
+
+    ``kind == "lut"`` evaluates a term list of the same shape as ``v_terms``
+    (see ``v_map_jnp``) — used by the non-aggregated families (PKM / ETM /
+    MSR) whose u-side maps are not a single indicator or bit-field."""
     import jax
     import jax.numpy as jnp
 
+    if kind == "lut":
+        return v_map_jnp(x, u_terms)
     piece = jax.lax.shift_right_logical(x.astype(jnp.int32), shift) & ((1 << bits) - 1)
     if kind == "indicator":
         return (piece == residue).astype(jnp.float32)
@@ -92,9 +98,9 @@ def piece_max(piece: mul.Piece, operand_max: int) -> int:
 class Feature:
     """One separable error feature: err contribution = u_tab[a] * v_tab[b]."""
 
-    kind: str                  # "indicator" | "linear"
+    kind: str                  # "indicator" | "linear" | "lut"
     piece: str                 # A-side piece name carrying u
-    residue: int               # indicator residue (-1 for linear)
+    residue: int               # indicator residue (-1 for linear/lut)
     u_tab: np.ndarray          # int32[256], elementwise map of the indicator side
     v_tab: np.ndarray          # int32[256], elementwise map of the other side
     # Structured form for in-kernel computation (no 256-gathers):
@@ -103,6 +109,8 @@ class Feature:
     v_terms: Tuple[Tuple[int, int, Tuple[int, ...]], ...]
     # each v term: (pb_shift, pb_bits, row) with
     #   v(b) = sum_terms row[(b >> pb_shift) & mask]
+    # "lut" features carry the u side in the same term form (see u_map_jnp):
+    u_terms: Tuple[Tuple[int, int, Tuple[int, ...]], ...] = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -155,6 +163,130 @@ def _error_tables_for_side(
     return {(pb, pa): e.T for (pa, pb), e in errs.items()}
 
 
+def _terms_tab(terms) -> np.ndarray:
+    """Dense int64[256] table of a term-list map (numpy mirror of v_map_jnp)."""
+    x = np.arange(256, dtype=np.int64)
+    out = np.zeros(256, np.int64)
+    for (shift, bits, row) in terms:
+        out += np.asarray(row, np.int64)[(x >> shift) & ((1 << bits) - 1)]
+    return out
+
+
+def _linear_terms(width: int, chunk: int = 4):
+    """Term list computing ``x & (2**width - 1)`` in <= ``chunk``-bit pieces
+    (each term has only 2**chunk - 1 nonzero coefficients -> cheap selects)."""
+    terms = []
+    s = 0
+    while s < width:
+        w = min(chunk, width - s)
+        terms.append((s, w, tuple(y << s for y in range(1 << w))))
+        s += w
+    return terms
+
+
+def _dense_term(tab: np.ndarray):
+    """A single full-width term for an arbitrary 256-entry map."""
+    return (0, 8, tuple(int(v) for v in np.asarray(tab, np.int64)))
+
+
+def _generic_feature_pairs(name: str):
+    """Exact separable factorizations  err(a, b) = sum_f A_f(a) * B_f(b)  for
+    the non-aggregated families, as (a_terms, b_terms) pairs.
+
+    * **PKM** is rank 1: every 2x2 Kulkarni cell errs by -2 exactly on the
+      (3, 3) input, so  err(a, b) = u(a) * 2*u(b)  with
+      ``u(x) = sum_i 4**i * [pair_i(x) == 3]`` over the four 2-bit pairs.
+    * **ETM** (split 4, Z(x) = [x < 16], al/ah = low/high nibble): seven
+      rank-1 features covering the cross terms, the dropped exact-low region
+      and the all-ones LSB saturation.
+    * **MSR** is rank 1:  err(a, b) = a * d(b)  with ``d(b) = b - msr(b)``
+      (the truncated low bits).  ``d`` splits as a linear bit-field base plus
+      a sparse dense-row correction so the in-kernel map stays select-cheap.
+    """
+    r16 = tuple(range(16))
+    if name == "pkm":
+        pair3 = lambda i, c: (2 * i, 2, (0, 0, 0, c))
+        return [(
+            [pair3(i, 4 ** i) for i in range(4)],
+            [pair3(i, 2 * 4 ** i) for i in range(4)],
+        )]
+    if name == "etm":
+        lo_lin = [(0, 4, r16)]
+        hi_lin4 = [(4, 4, tuple(y << 4 for y in r16))]
+        full_lin = lo_lin + hi_lin4
+        below16 = lambda c: np.array([c * (0 < y < 16) for y in range(256)])
+        x_below16 = lambda c: np.array([c * y * (y < 16) for y in range(256)])
+        return [
+            (full_lin, lo_lin),                                   # a * bl
+            (lo_lin, hi_lin4),                                    # al * (bh<<4)
+            ([_dense_term(x_below16(-1))], [_dense_term(x_below16(1))]),
+            ([(0, 4, (0,) + (-240,) * 15)], [(0, 0, (1,))]),      # -240[al>0]
+            ([(0, 4, (-240,) + (0,) * 15)], [(0, 4, (0,) + (1,) * 15)]),
+            ([_dense_term(below16(240))], [(4, 4, (1,) + (0,) * 15)]),
+            ([(0, 8, (240,) + (0,) * 255)], [_dense_term(below16(1))]),
+        ]
+    if name in mul.MSR_SPECS:
+        spec = mul.MSR_SPECS[name]
+        b = np.arange(256, dtype=np.int64)
+        d = b - spec.truncate(b)
+        base_terms = _linear_terms(spec.shifts[-1])
+        resid = d - _terms_tab(base_terms)
+        b_terms = base_terms + ([_dense_term(resid)] if np.any(resid) else [])
+        return [(_linear_terms(8), b_terms)]
+    raise KeyError(f"no generic factorization for {name!r}")
+
+
+def _build_generic_correction(
+    name: str, *, side: str, lhs_max: int, rhs_max: int
+) -> LowRankCorrection:
+    """Feature set for a non-aggregated family, verified exact at build time
+    on the restricted domain (the factorizations above are hand-derived, so
+    the reconstruction assert is the safety net, not a formality)."""
+    ind_max = rhs_max if side == "rhs" else lhs_max
+    oth_max = lhs_max if side == "rhs" else rhs_max
+    features: List[Feature] = []
+    for a_terms, b_terms in _generic_feature_pairs(name):
+        a_tab, b_tab = _terms_tab(a_terms), _terms_tab(b_terms)
+        if side == "rhs":
+            u_tab, v_tab, u_terms, v_terms = b_tab, a_tab, b_terms, a_terms
+        else:
+            u_tab, v_tab, u_terms, v_terms = a_tab, b_tab, a_terms, b_terms
+        # Range pruning: a feature vanishing on either restricted operand
+        # domain contributes nothing (MSR goes fully exact for
+        # rhs_max < 2**keep_bits — the identity tap always wins).
+        if not np.any(u_tab[: ind_max + 1]) or not np.any(v_tab[: oth_max + 1]):
+            continue
+        features.append(
+            Feature(
+                kind="lut",
+                piece="lut",
+                residue=-1,
+                u_tab=u_tab.astype(np.int32),
+                v_tab=v_tab.astype(np.int32),
+                u_shift=0,
+                u_bits=0,
+                v_terms=tuple(v_terms),
+                u_terms=tuple(u_terms),
+            )
+        )
+    corr = LowRankCorrection(
+        multiplier=name,
+        side=side,
+        lhs_max=lhs_max,
+        rhs_max=rhs_max,
+        features=tuple(features),
+    )
+    want = (
+        mul.exact_table(8, 8).astype(np.int64) - mul.mul8x8_table(name)
+    )[: lhs_max + 1, : rhs_max + 1]
+    got = corr.error_table()[: lhs_max + 1, : rhs_max + 1]
+    assert np.array_equal(got, want), (
+        f"generic factorization for {name!r} is not exact on "
+        f"[0,{lhs_max}]x[0,{rhs_max}]"
+    )
+    return corr
+
+
 def build_correction(
     multiplier: str,
     *,
@@ -162,16 +294,25 @@ def build_correction(
     lhs_max: int = 255,
     rhs_max: int = 255,
 ) -> LowRankCorrection:
-    """Build the exact feature factorization for a named aggregated multiplier.
+    """Build the exact feature factorization for a named multiplier.
 
     ``side``: which matmul operand carries the 0/1 indicator features.  Use
     "rhs" when the rhs (weights) is static so U(W) can be precomputed, or when
     the weights are range-constrained by co-optimization (fewer rows survive).
     ``lhs_max``/``rhs_max``: known value bounds (inclusive) used for pruning.
     The result is exact on the restricted domain [0, lhs_max] x [0, rhs_max].
+
+    Aggregated designs (exact / mul8x8_*) factor through their per-piece error
+    tables; PKM / ETM / MSR take the generic hand-derived factorizations in
+    ``_generic_feature_pairs`` (build-time verified).
     """
     if side not in ("lhs", "rhs"):
         raise ValueError(side)
+    lname = multiplier.lower()
+    if lname in ("pkm", "etm") or lname in mul.MSR_SPECS:
+        return _build_generic_correction(
+            lname, side=side, lhs_max=lhs_max, rhs_max=rhs_max
+        )
     spec = mul.aggregation_spec(multiplier)
     pieces = {p.name: p for p in spec.pieces}
     ind_max = rhs_max if side == "rhs" else lhs_max   # bound on indicator operand

@@ -58,6 +58,9 @@ __all__ = [
     "pkm_2x2_table",
     "pkm_8x8_table",
     "etm_8x8_table",
+    "MSRSpec",
+    "MSR_SPECS",
+    "msr_8x8_table",
     "MULTIPLIERS",
     "get_multiplier",
 ]
@@ -295,6 +298,78 @@ def etm_8x8_table(split: int = 4) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# MSR fixed-shift truncation family (ROADMAP: Most-Significant-Run)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MSRSpec:
+    """Most-Significant-Run fixed-shift truncation of the weight operand.
+
+    DRUM-style designs keep a ``keep_bits``-wide window below the leading
+    one, which needs a runtime leading-one detector and a barrel shifter.
+    The MSR observation: in a two's-complement weight the run of identical
+    sign bits below the MSB carries one bit of information, so the window
+    start can be quantized to a SMALL FIXED set of shifts ``shifts`` —
+    each shift is a hard-wired tap, selected by a priority encoder over
+    ``len(shifts)`` range comparators instead of a full LOD + barrel
+    shifter.  For an (unsigned, post-affine-quant) operand ``b`` the
+    selected shift is the least ``s`` with ``b < 2**(keep_bits + s)`` and
+    the low ``s`` bits are truncated::
+
+        msr(b) = b & ~((1 << s) - 1)
+
+    ``keep_bits + max(shifts)`` must cover the full operand width so every
+    value selects a tap.  The multiplier then computes ``a * msr(b)``: a
+    ``keep_bits``-wide multiplier plus the fixed shift network, in place
+    of a full-width array.
+    """
+
+    keep_bits: int
+    shifts: Tuple[int, ...]
+
+    def __post_init__(self) -> None:
+        if tuple(sorted(self.shifts)) != self.shifts or 0 not in self.shifts:
+            raise ValueError("shifts must be ascending and include 0")
+        if self.keep_bits + self.shifts[-1] < 8:
+            raise ValueError("keep_bits + max shift must cover 8 bits")
+
+    def shift_of(self, b: np.ndarray) -> np.ndarray:
+        """Per-value selected shift: least s with b < 2**(keep_bits+s)."""
+        b = np.asarray(b, dtype=np.int64)
+        s = np.full(b.shape, self.shifts[-1], dtype=np.int64)
+        for cand in reversed(self.shifts):
+            s = np.where(b < (1 << (self.keep_bits + cand)), cand, s)
+        return s
+
+    def truncate(self, b: np.ndarray) -> np.ndarray:
+        """msr(b): b with the selected shift's low bits cleared."""
+        b = np.asarray(b, dtype=np.int64)
+        return b & ~((1 << self.shift_of(b)) - 1)
+
+
+#: The registered rungs.  msr4 is the serving-tier default: one comparator
+#: (b < 16) picks between the identity tap and a single 4-bit truncation.
+MSR_SPECS: Dict[str, MSRSpec] = {
+    "mul8x8_msr2": MSRSpec(keep_bits=2, shifts=(0, 2, 4, 6)),
+    "mul8x8_msr4": MSRSpec(keep_bits=4, shifts=(0, 4)),
+    "mul8x8_msr6": MSRSpec(keep_bits=6, shifts=(0, 2)),
+}
+
+
+@functools.lru_cache(maxsize=None)
+def msr_8x8_table(name: str) -> np.ndarray:
+    """Dense 256x256 LUT of ``a * msr(b)`` for a registered MSR rung.
+
+    Truncation is applied to the RHS operand only — weights sit on the RHS
+    throughout this repo (see MUL8x8_3's M2-removal rationale above).
+    """
+    spec = MSR_SPECS[name.lower()]
+    a = np.arange(256, dtype=np.int64)
+    return (a[:, None] * spec.truncate(np.arange(256))[None, :]).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
 # Registry
 # ---------------------------------------------------------------------------
 
@@ -315,6 +390,8 @@ def mul8x8_table(name: str) -> np.ndarray:
         return pkm_8x8_table()
     if name == "etm":
         return etm_8x8_table()
+    if name in MSR_SPECS:
+        return msr_8x8_table(name)
     raise KeyError(f"unknown multiplier {name!r}")
 
 
@@ -325,6 +402,9 @@ MULTIPLIERS: Tuple[str, ...] = (
     "mul8x8_3",
     "pkm",
     "etm",
+    "mul8x8_msr2",
+    "mul8x8_msr4",
+    "mul8x8_msr6",
 )
 
 

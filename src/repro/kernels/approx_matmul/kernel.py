@@ -1,8 +1,8 @@
 """Pallas TPU kernel: fused approximate-multiplier matmul.
 
-Computes  out[m, n] = sum_k LUT[a[m, k], b[k, n]]  for an aggregated
-approximate multiplier (MUL8x8_1/2/3) WITHOUT any per-MAC gather, using the
-exact decomposition (core/lowrank.py):
+Computes  out[m, n] = sum_k LUT[a[m, k], b[k, n]]  for any registered
+multiplier family (aggregated MUL8x8_1/2/3, PKM, ETM, fixed-shift MSR)
+WITHOUT any per-MAC gather, using the exact decomposition (core/lowrank.py):
 
     out = A @ B - sum_f  v_f(A) @ u_f(B)
 
@@ -34,13 +34,15 @@ from repro.core import lowrank as lr
 __all__ = ["approx_matmul_kernel_call", "FeatureMeta", "features_meta"]
 
 # Static per-feature metadata consumed by the kernel body:
-#   (kind, u_shift, u_bits, residue, v_terms)
-FeatureMeta = Tuple[str, int, int, int, Tuple[Tuple[int, int, Tuple[int, ...]], ...]]
+#   (kind, u_shift, u_bits, residue, v_terms, u_terms)
+_Terms = Tuple[Tuple[int, int, Tuple[int, ...]], ...]
+FeatureMeta = Tuple[str, int, int, int, _Terms, _Terms]
 
 
 def features_meta(corr: lr.LowRankCorrection) -> Tuple[FeatureMeta, ...]:
     return tuple(
-        (f.kind, f.u_shift, f.u_bits, f.residue, f.v_terms) for f in corr.features
+        (f.kind, f.u_shift, f.u_bits, f.residue, f.v_terms, f.u_terms)
+        for f in corr.features
     )
 
 
@@ -63,9 +65,9 @@ def _kernel(a_ref, b_ref, out_ref, acc_ref, *, features: Tuple[FeatureMeta, ...]
     tile = jax.lax.dot_general(
         af, bf, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
     )
-    for (kind, u_shift, u_bits, residue, v_terms) in features:
+    for (kind, u_shift, u_bits, residue, v_terms, u_terms) in features:
         v_a = _v_map(a, v_terms)              # (bm, bk) lhs-side table values
-        u_b = _u_map(b, kind, u_shift, u_bits, residue)  # (bk, bn) indicators
+        u_b = _u_map(b, kind, u_shift, u_bits, residue, u_terms)  # (bk, bn)
         tile -= jax.lax.dot_general(
             v_a, u_b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
         )

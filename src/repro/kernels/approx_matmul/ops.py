@@ -1,8 +1,9 @@
 """Public jit'd wrapper around the Pallas approx-matmul kernel.
 
 Handles leading batch dimensions, pads (M, N, K) up to block multiples
-(zero codes are error-free under the aggregated multipliers, so padding is
-semantically inert), and auto-selects interpret mode off-TPU.
+(K padding only ever pairs zero codes with zero codes and every registered
+LUT maps (0, 0) -> 0; padded M/N rows are sliced off), and auto-selects
+interpret mode off-TPU.
 """
 from __future__ import annotations
 

@@ -25,7 +25,12 @@ cannot starve active decodes (see docs/serving.md).  ``--prefix-sharing``
 turns on refcounted copy-on-write prefix sharing over the block pool and
 ``--preemption`` replaces the worst-case block reservation with
 oversubscription + evict-and-replay; ``--pad-id`` sets the model's real pad
-token for bucketed prefill rows.
+token for bucketed prefill rows.  ``--tiers`` serves a quality ladder
+(comma-separated execution modes, e.g. ``exact,approx_lowrank,approx_msr``):
+each synthetic request is routed to a random rung, and the
+``--shed-queue-depth`` / ``--shed-gap-ticks`` thresholds arm the
+load-adaptive shedder that demotes new admissions down the ladder under
+pressure (see docs/serving.md "Quality tiers").
 """
 from __future__ import annotations
 
@@ -135,6 +140,28 @@ def main(argv=None):
     ap.add_argument("--draft-window", type=int, default=32,
                     help="dynamic draft: rolling (drafted, accepted) "
                          "chunks judged before each ladder move")
+    ap.add_argument("--tiers", default=None,
+                    help="continuous engine: comma-separated execution-mode "
+                         "quality ladder (best first), e.g. "
+                         "'exact,approx_lowrank,approx_msr'; requests are "
+                         "routed per-rung with bit-identical per-request "
+                         "outputs and zero recompiles after warmup")
+    ap.add_argument("--tier-multiplier", default="mul8x8_2",
+                    help="tiers: multiplier for approx rungs (MSR rungs "
+                         "fall back to mul8x8_msr4 unless an MSR name is "
+                         "given)")
+    ap.add_argument("--shed-queue-depth", type=int, default=None,
+                    help="tiers: demote new admissions one rung when the "
+                         "ready queue exceeds this depth")
+    ap.add_argument("--shed-gap-ticks", type=int, default=None,
+                    help="tiers: demote new admissions one rung when the "
+                         "live decode gap exceeds this many work ticks")
+    ap.add_argument("--shed-hold-steps", type=int, default=8,
+                    help="shedder: consecutive healthy steps before "
+                         "restoring one rung")
+    ap.add_argument("--shed-restore-fraction", type=float, default=0.5,
+                    help="shedder: healthy = load below this fraction of "
+                         "the shed thresholds (hysteresis)")
     ap.add_argument("--tp", type=int, default=0,
                     help="continuous engine: tensor-parallel degree — "
                          "serve under a (tp,)-device 'model' mesh with "
@@ -195,6 +222,9 @@ def main(argv=None):
                     f"--xla_force_host_platform_device_count={args.tp})"
                 )
             mesh = jax.make_mesh((args.tp,), ("model",))
+        tiers = None
+        if args.tiers:
+            tiers = tuple(t.strip() for t in args.tiers.split(",") if t.strip())
         sess = ServeSession(
             cfg, params, num_slots=args.num_slots, max_len=max_len,
             prompt_buckets=tuple(buckets), sampling=sampling,
@@ -209,6 +239,11 @@ def main(argv=None):
             dynamic_draft_k=args.dynamic_draft_k,
             draft_cost_ratio=args.draft_cost_ratio,
             draft_window=args.draft_window,
+            tiers=tiers, tier_multiplier=args.tier_multiplier,
+            shed_queue_depth=args.shed_queue_depth,
+            shed_gap_ticks=args.shed_gap_ticks,
+            shed_hold_steps=args.shed_hold_steps,
+            shed_restore_fraction=args.shed_restore_fraction,
             mesh=mesh,
         )
         sess.warmup()
@@ -217,7 +252,8 @@ def main(argv=None):
             prompt = rng.integers(0, cfg.vocab_size, plen)
             lo = min(max(2, args.new // 4), args.new)
             max_new = int(rng.integers(lo, args.new + 1))
-            sess.submit(prompt, max_new=max_new)
+            tier = str(rng.choice(tiers)) if tiers is not None else None
+            sess.submit(prompt, max_new=max_new, tier=tier)
         t0 = time.perf_counter()
         results = sess.run()
         dt = time.perf_counter() - t0
@@ -246,6 +282,15 @@ def main(argv=None):
                 print(f"  tensor parallel: tp={st.tp} over {st.devices} "
                       f"devices, peak KV "
                       f"{st.peak_block_bytes_per_device/2**20:.2f} MiB/device")
+        if tiers is not None:
+            served = {t: 0 for t in tiers}
+            for r in results.values():
+                served[r.tier] = served.get(r.tier, 0) + 1
+            print(f"  tiers {','.join(tiers)}: served " +
+                  " ".join(f"{t}={n}" for t, n in served.items()) +
+                  f", demotions {st.tier_demotions}, "
+                  f"restorations {st.tier_restorations}, "
+                  f"shed level now {st.shed_level}")
         if args.spec_decode:
             print(f"  spec decode: draft {args.draft_mode}/{args.multiplier} "
                   f"k={args.draft_k}, accept rate {st.accept_rate*100:.1f}% "

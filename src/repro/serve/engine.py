@@ -68,10 +68,12 @@ __all__ = [
 # Execution modes (serving-level names for the paper's multiplier pipeline)
 # ---------------------------------------------------------------------------
 
-EXECUTION_MODES = ("exact", "exact_quant", "approx", "approx_lowrank")
+EXECUTION_MODES = ("exact", "exact_quant", "approx", "approx_lowrank", "approx_msr")
 
 
-def resolve_execution_mode(mode: str, multiplier: str = "mul8x8_2") -> ApproxConfig:
+def resolve_execution_mode(
+    mode: str, multiplier: str = "mul8x8_2", *, act_per_row: bool = False
+) -> ApproxConfig:
     """Map a serving execution mode onto an ``ApproxConfig``.
 
     exact          float matmuls (baseline)
@@ -79,15 +81,32 @@ def resolve_execution_mode(mode: str, multiplier: str = "mul8x8_2") -> ApproxCon
     approx         named approximate multiplier through the fused Pallas
                    kernel (interpret mode off-TPU — bit-exact to the LUT)
     approx_lowrank same semantics via the XLA low-rank path (fast on CPU)
+    approx_msr     the fixed-shift MSR truncation family through the same
+                   Pallas kernel (default rung ``mul8x8_msr4`` unless an
+                   ``mul8x8_msr*`` name is passed) — the cheapest rung of
+                   the serving quality ladder
+
+    ``act_per_row`` selects per-row (per-token) activation scales so a
+    row's outputs never depend on its batch neighbours — mixed-tier
+    serving relies on this for bit-identical per-request parity.
     """
     if mode == "exact":
         return ApproxConfig(mode="float")
     if mode == "exact_quant":
-        return ApproxConfig(multiplier="exact", mode="exact_quant")
+        return ApproxConfig(multiplier="exact", mode="exact_quant",
+                            act_per_row=act_per_row)
     if mode == "approx":
-        return ApproxConfig(multiplier=multiplier, mode="pallas")
+        return ApproxConfig(multiplier=multiplier, mode="pallas",
+                            act_per_row=act_per_row)
     if mode == "approx_lowrank":
-        return ApproxConfig(multiplier=multiplier, mode="lowrank")
+        return ApproxConfig(multiplier=multiplier, mode="lowrank",
+                            act_per_row=act_per_row)
+    if mode == "approx_msr":
+        from repro.core.multipliers import MSR_SPECS
+
+        msr = multiplier if multiplier in MSR_SPECS else "mul8x8_msr4"
+        return ApproxConfig(multiplier=msr, mode="pallas",
+                            act_per_row=act_per_row)
     raise ValueError(f"execution mode {mode!r} not in {EXECUTION_MODES}")
 
 

@@ -99,7 +99,23 @@ scale, so there parity is statistical, not bitwise).
 
 Execution modes: the session serves whatever ``cfg.approx`` selects —
 ``exact`` / ``exact_quant`` / ``approx`` (Pallas kernel) /
-``approx_lowrank`` — and accepts ``freeze_params`` QWeight trees.
+``approx_lowrank`` / ``approx_msr`` — and accepts ``freeze_params``
+QWeight trees.
+
+**Quality tiers** (``tiers=("exact", "approx", "approx_msr")``) instead
+route each REQUEST through its own execution mode: one compiled decode
+program per ladder rung, dispatched per step for the rungs holding active
+rows, with the other tiers' rows made write-inert exactly the way released
+rows already are (sentinel block tables / out-of-bounds ``cur_len``).  A
+request's rung is frozen at admission — ``submit(..., tier=...)`` names the
+requested rung, and the **load shedder** (``shed_queue_depth`` /
+``shed_gap_ticks``) may demote new admissions further down the ladder while
+the session is overloaded, restoring with hysteresis
+(``shed_hold_steps``).  Per-rung configs use per-row activation scales
+(``act_per_row``), so every request's greedy output is bit-identical to a
+single-mode oracle session of its effective rung regardless of what else
+shares the batch.  Tier sessions take raw float params (the rungs disagree
+about quantization, so ``freeze_params`` trees cannot be shared).
 """
 from __future__ import annotations
 
@@ -127,7 +143,13 @@ from repro.models.transformer import (
 )
 from repro.parallel.sharding import constrain as _sh_constrain
 from repro.serve import cache as C
-from repro.serve.engine import SamplingConfig, draft_config, select_token
+from repro.serve.engine import (
+    EXECUTION_MODES,
+    SamplingConfig,
+    draft_config,
+    resolve_execution_mode,
+    select_token,
+)
 
 __all__ = [
     "Request",
@@ -672,13 +694,15 @@ def scheduler_compile_stats() -> Dict[str, int]:
 class Request:
     """One generation request. ``arrival`` is in scheduler ticks (one decode
     step == one tick); ``priority`` orders admission (lower first, FIFO
-    within a class)."""
+    within a class); ``tier`` names the requested quality-ladder rung
+    (``None`` = the session's best rung; tier sessions only)."""
 
     req_id: int
     prompt: np.ndarray          # (S0,) int32
     max_new: int
     priority: int = 0
     arrival: int = 0
+    tier: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -689,6 +713,9 @@ class CompletedRequest:
     finish_reason: str          # "eos" | "length"
     admitted_tick: int
     finished_tick: int
+    # quality tiers: the EFFECTIVE rung the request was served at (requested
+    # rung, possibly demoted by the load shedder); "" when tiers are off
+    tier: str = ""
 
     @property
     def full_sequence(self) -> np.ndarray:
@@ -817,6 +844,20 @@ class SchedulerStats:
         "draft_k_grows": "speculative decoding: times dynamic_draft_k "
                          "re-grew the draft window (rolling accept rate "
                          "back at/above break-even)",
+        "tier_demotions": "quality tiers: times the load shedder raised "
+                          "the shed level (new admissions demoted one rung "
+                          "further down the tier ladder)",
+        "tier_restorations": "quality tiers: times the shedder lowered the "
+                             "shed level after shed_hold_steps consecutive "
+                             "healthy steps (the hysteresis window clears "
+                             "on every level change)",
+        "shed_level": "quality tiers: current shed level — new admissions "
+                      "serve at ladder rung max(requested, shed_level); "
+                      "0 = no shedding in effect",
+        "active_per_tier": "quality tiers: currently-resident requests per "
+                           "EFFECTIVE ladder rung (the rung each request "
+                           "was admitted at, post-shedding); empty when "
+                           "tiers are off",
     }
 
     ticks: int = 0
@@ -850,6 +891,10 @@ class SchedulerStats:
     draft_k_current: int = 0
     draft_k_shrinks: int = 0
     draft_k_grows: int = 0
+    tier_demotions: int = 0
+    tier_restorations: int = 0
+    shed_level: int = 0
+    active_per_tier: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def accept_rate(self) -> float:
@@ -913,6 +958,10 @@ class _ActiveSlot:
     # (re-admitted rows have non-empty `tokens` while it is still pending,
     # so emptiness can no longer stand in for this)
     pending_first: bool = False
+    # quality tiers: the effective ladder rung this request decodes under,
+    # frozen at admission (preemption replays re-admit at the same rung so
+    # the replay stays bit-identical)
+    tier_idx: int = 0
 
 
 @dataclasses.dataclass
@@ -925,7 +974,9 @@ class _Inflight:
     chunk's steps were charged — the emission time used by the starvation
     gauge."""
 
-    toks: Any                  # (steps, N) device future
+    toks: Any                  # (steps, N) device future; quality tiers: a
+                               # tuple of per-rung futures (disjoint row
+                               # masks — merged by elementwise sum at harvest)
     steps: int
     states: List[Optional[_ActiveSlot]]
     work_end: int
@@ -989,7 +1040,22 @@ class ServeSession:
     Rows advance unevenly (1..draft_k+1 tokens per tick), which is why the
     async loop keeps a device-resident length carry next to the token
     carry.  ``close()`` flushes the in-flight chunk and seals the session:
-    later ``submit``/``step`` raise ``RuntimeError``."""
+    later ``submit``/``step`` raise ``RuntimeError``.
+
+    ``tiers=("exact", "approx", "approx_msr")`` turns on per-request
+    quality-tier routing (attention families; mutually exclusive with
+    ``spec_decode``): each rung gets its own compiled decode/prefill
+    programs (the session cfg with only ``cfg.approx`` swapped —
+    ``tier_multiplier`` names the approximate design, MSR rungs default to
+    ``mul8x8_msr4``), ``submit(..., tier=...)`` picks a request's rung, and
+    every step dispatches one decode chunk per rung holding active rows.
+    ``warmup()`` compiles the full rung x width x bucket program set, so no
+    tier mix recompiles.  ``shed_queue_depth`` / ``shed_gap_ticks`` arm the
+    load shedder: breaches demote NEW admissions one rung down the ladder
+    (resident requests never switch rungs — a request's output is
+    bit-identical to a single-mode oracle of its effective rung), and
+    recovery restores one rung after ``shed_hold_steps`` consecutive steps
+    below ``shed_restore_fraction`` of the thresholds."""
 
     def __init__(
         self,
@@ -1022,6 +1088,12 @@ class ServeSession:
         dynamic_draft_k: bool = False,
         draft_cost_ratio: float = 4.0,
         draft_window: int = 32,
+        tiers: Optional[Sequence[str]] = None,
+        tier_multiplier: str = "mul8x8_2",
+        shed_queue_depth: Optional[int] = None,
+        shed_gap_ticks: Optional[int] = None,
+        shed_hold_steps: int = 8,
+        shed_restore_fraction: float = 0.5,
         mesh=None,
         tp_axis: str = "model",
     ):
@@ -1090,6 +1162,54 @@ class ServeSession:
                 )
             if draft_window < 1:
                 raise ValueError(f"draft_window must be >= 1, got {draft_window}")
+        if tiers is not None:
+            tiers = tuple(tiers)
+            if not tiers:
+                raise ValueError("tiers must name at least one execution mode")
+            if len(set(tiers)) != len(tiers):
+                raise ValueError(f"tiers contains duplicate rungs: {tiers}")
+            for t in tiers:
+                if t not in EXECUTION_MODES:
+                    raise ValueError(
+                        f"tier {t!r} not in execution modes {EXECUTION_MODES}"
+                    )
+            if spec_decode:
+                raise ValueError(
+                    "tiers and spec_decode both repurpose the per-dispatch "
+                    "cfg.approx execution routing — set at most one"
+                )
+            if cfg.family in ("ssm", "hybrid"):
+                raise ValueError(
+                    "quality tiers dispatch one decode program per rung and "
+                    "rely on positional KV writes to keep the other rungs' "
+                    f"rows untouched — {cfg.family} carries non-positional "
+                    "conv/ssm state, so tier serving requires an attention "
+                    "family"
+                )
+        shed_on = shed_queue_depth is not None or shed_gap_ticks is not None
+        if shed_on:
+            if tiers is None or len(tiers) < 2:
+                raise ValueError(
+                    "load shedding demotes admissions down the quality "
+                    "ladder — it requires tiers with >= 2 rungs"
+                )
+            if shed_queue_depth is not None and shed_queue_depth < 1:
+                raise ValueError(
+                    f"shed_queue_depth must be >= 1, got {shed_queue_depth}"
+                )
+            if shed_gap_ticks is not None and shed_gap_ticks < 1:
+                raise ValueError(
+                    f"shed_gap_ticks must be >= 1, got {shed_gap_ticks}"
+                )
+            if shed_hold_steps < 1:
+                raise ValueError(
+                    f"shed_hold_steps must be >= 1, got {shed_hold_steps}"
+                )
+            if not 0.0 < shed_restore_fraction <= 1.0:
+                raise ValueError(
+                    "shed_restore_fraction must be in (0, 1], got "
+                    f"{shed_restore_fraction}"
+                )
         if mesh is not None:
             if tp_axis != "model":
                 raise ValueError(
@@ -1147,6 +1267,37 @@ class ServeSession:
             draft_config(cfg, draft_mode, draft_multiplier) if self.spec
             else None
         )
+        # -- quality tiers ----------------------------------------------------
+        # One ModelConfig per ladder rung: the session cfg with only `approx`
+        # swapped (the draft_config pattern — shared weights, one compiled
+        # decode program per rung).  act_per_row=True makes each batch row's
+        # quantized math independent of its neighbours, which is what makes
+        # a mixed-tier batch bit-identical per request to a single-mode
+        # oracle session of its rung.
+        self.tiers: Optional[Tuple[str, ...]] = tiers
+        self.tier_multiplier = tier_multiplier
+        self._tier_cfgs: Tuple[ModelConfig, ...] = (
+            tuple(
+                dataclasses.replace(
+                    cfg,
+                    approx=resolve_execution_mode(
+                        t, tier_multiplier, act_per_row=True
+                    ),
+                )
+                for t in tiers
+            )
+            if tiers is not None else ()
+        )
+        self._shed_on = shed_on
+        self.shed_queue_depth = shed_queue_depth
+        self.shed_gap_ticks = shed_gap_ticks
+        self.shed_hold_steps = int(shed_hold_steps)
+        self.shed_restore_fraction = float(shed_restore_fraction)
+        self._shed_level = 0
+        # consecutive healthy steps toward a restore; cleared on every shed-
+        # level change and on every unhealthy step (the hysteresis window)
+        self._shed_ok_steps = 0
+        self._tier_active_counts: List[int] = [0] * (len(tiers) if tiers else 0)
         self.buckets = C.PromptBuckets(prompt_buckets)
         if self.buckets.max_size > self.max_len:
             raise ValueError(
@@ -1203,9 +1354,10 @@ class ServeSession:
             # prefix sharing: content -> physical block; the scheduler takes
             # one pool ref per published block on the cache's behalf
             self._prefix = C.PrefixCache() if self.prefix_sharing else None
-            # preemption: req_id -> (accepted tokens, original admit tick),
-            # consumed when the victim re-admits and replays
-            self._preempt_resume: Dict[int, Tuple[List[int], int]] = {}
+            # preemption: req_id -> (accepted tokens, original admit tick,
+            # effective tier rung), consumed when the victim re-admits and
+            # replays (at the SAME rung — the replay must be bit-identical)
+            self._preempt_resume: Dict[int, Tuple[List[int], int, int]] = {}
         else:
             self._prefix = None
             self._preempt_resume = {}
@@ -1243,6 +1395,9 @@ class ServeSession:
         self._last_token = np.zeros((num_slots,), np.int32)
         self._cur_len = np.zeros((num_slots,), np.int32)
         self._slot_keys = np.zeros((num_slots, 2), np.uint32)
+        # quality tiers: each slot occupant's effective ladder rung (valid
+        # only where a slot is occupied — per-rung dispatch masks on it)
+        self._slot_tier = np.zeros((num_slots,), np.int32)
         self._base_key = jax.random.PRNGKey(seed)
 
         self._active: List[Optional[_ActiveSlot]] = [None] * num_slots
@@ -1296,8 +1451,12 @@ class ServeSession:
         req_id: Optional[int] = None,
         priority: int = 0,
         arrival: int = 0,
+        tier: Optional[str] = None,
     ) -> int:
         """Queue one request; returns its id. ``arrival`` in ticks.
+        ``tier`` names the requested quality-ladder rung (tier sessions
+        only; ``None`` = the session's best rung) — the load shedder may
+        still demote the EFFECTIVE rung at admission time.
 
         Every shape constraint is validated HERE, naming the request — a
         request that can never be admitted must fail at submit, not deep
@@ -1310,6 +1469,17 @@ class ServeSession:
                 f"request {rid}: submitted after close() — the session is "
                 "sealed and its pipeline flushed; create a new ServeSession"
             )
+        if tier is not None:
+            if self.tiers is None:
+                raise ValueError(
+                    f"request {rid}: tier={tier!r} on a session without a "
+                    "quality ladder — construct ServeSession(tiers=(...))"
+                )
+            if tier not in self.tiers:
+                raise ValueError(
+                    f"request {rid}: tier {tier!r} not in session tiers "
+                    f"{self.tiers}"
+                )
         if prompt.size < 1:
             raise ValueError(f"request {rid}: empty prompt")
         if max_new < 1:
@@ -1369,7 +1539,8 @@ class ServeSession:
         ):
             raise ValueError(f"req_id {req_id} already in use")
         self._next_id = max(self._next_id, req_id) + 1
-        req = Request(req_id, prompt, int(max_new), int(priority), int(arrival))
+        req = Request(req_id, prompt, int(max_new), int(priority), int(arrival),
+                      tier)
         if req.arrival > self.clock:
             heapq.heappush(self._pending, (req.arrival, self._seq, req))
             self._seq += 1
@@ -1380,7 +1551,7 @@ class ServeSession:
     def submit_all(self, requests: Sequence[Request]) -> None:
         for r in requests:
             self.submit(r.prompt, r.max_new, req_id=r.req_id,
-                        priority=r.priority, arrival=r.arrival)
+                        priority=r.priority, arrival=r.arrival, tier=r.tier)
 
     def _ready_key(self, req: Request, eff_len: Optional[int] = None) -> int:
         """Admission-order key under the session policy (ties broken FIFO by
@@ -1478,7 +1649,7 @@ class ServeSession:
         push the original request back on the ready queue."""
         state.preempted = True
         self._preempt_resume[state.req.req_id] = (
-            list(state.tokens), state.admitted_tick
+            list(state.tokens), state.admitted_tick, state.tier_idx
         )
         self._release_resources(state)
         self._push_ready(state.req)
@@ -1566,7 +1737,7 @@ class ServeSession:
             w <<= 1
         return min(w, self.num_slots)
 
-    def _admit_many(self, reqs: List[Request]) -> None:
+    def _admit_many(self, reqs: List[Request], tier_idx: int = 0) -> None:
         """Admit up to ``num_slots`` requests with ONE prefill dispatch: all
         prompts pad to the largest needed bucket, the row count pads to the
         admit-width bucket, and padding rows are no-ops — so the compiled
@@ -1574,8 +1745,13 @@ class ServeSession:
         paged layout each request additionally acquires its prompt's blocks
         (``ceil(prompt_len / block_size)`` — proportional to the *actual*
         context, not the bucket or ``max_len``), converting that much of the
-        reservation ``step`` took out when it popped the request."""
+        reservation ``step`` took out when it popped the request.  On a tier
+        session every request of the batch shares the effective rung
+        ``tier_idx`` (``_admit_phase`` groups by rung) and prefills under
+        that rung's config — the prompt KV must be seeded by the same
+        execution mode its decode runs."""
         assert 0 < len(reqs) <= self.pool.free_count
+        acfg = self._tier_cfgs[tier_idx] if self.tiers is not None else self.cfg
         A = self._admit_width(len(reqs))
         effs = [self._eff_prompt(r) for r in reqs]   # replay prompt if resumed
         bucket = max(self.buckets.bucket(e.size) for e in effs)
@@ -1619,8 +1795,12 @@ class ServeSession:
                     # Publishing happens host-side before the next request
                     # of this batch is processed, so batch-mates share too
                     # (the single dispatch writes each block exactly once —
-                    # the one non-sentinel row).
-                    parent = C.PrefixCache.ROOT
+                    # the one non-sentinel row).  Quality tiers: a block's
+                    # K/V is rung-specific (it was prefilled under one
+                    # rung's execution mode), so each rung chains from its
+                    # OWN root — distinct negative roots never collide with
+                    # interned kids (>= 0), keeping the rung chains disjoint
+                    parent = C.PrefixCache.ROOT - tier_idx
                     for j in range(ninit):
                         toks = eff[j * bs:min((j + 1) * bs, plen)]
                         kid = self._prefix.key(parent, toks)
@@ -1657,7 +1837,7 @@ class ServeSession:
                     )
                     self._reserved_total -= ninit      # reservation -> held
             self.cache, tok0s, req_keys = _admit_fused_paged_jit(
-                cfg=self.cfg, params=self.params, cache=self.cache,
+                cfg=acfg, params=self.params, cache=self.cache,
                 prompts=prompts, prompt_lens=prompt_lens, block_ids=block_ids,
                 req_ids=req_ids, base_key=self._base_key,
                 sampling=self.sampling, block_size=self.block_size,
@@ -1671,14 +1851,14 @@ class ServeSession:
         else:
             if self.prefill_mode == "fused":
                 self.cache, tok0s, req_keys = _admit_fused_jit(
-                    cfg=self.cfg, params=self.params, cache=self.cache,
+                    cfg=acfg, params=self.params, cache=self.cache,
                     prompts=prompts, prompt_lens=prompt_lens, slots=slots,
                     valid=valid, req_ids=req_ids, base_key=self._base_key,
                     sampling=self.sampling,
                 )
             else:
                 self.cache, tok0s, req_keys = _admit_decode_jit(
-                    cfg=self.cfg, params=self.params, cache=self.cache,
+                    cfg=acfg, params=self.params, cache=self.cache,
                     prompts=prompts, prompt_lens=prompt_lens, slots=slots,
                     valid=valid, req_ids=req_ids, base_key=self._base_key,
                     sampling=self.sampling,
@@ -1733,13 +1913,17 @@ class ServeSession:
                 if resume is None:
                     self.stats.admitted += 1
                     self.stats.ttft_ticks.append(self.clock - req.arrival)
-                    state = _ActiveSlot(req, slot, [], self.clock)
+                    state = _ActiveSlot(req, slot, [], self.clock,
+                                        tier_idx=tier_idx)
                 else:
                     # re-admission after preemption: the request keeps its
                     # accepted tokens and original admit tick — admitted/
                     # ttft were already counted at first admit
-                    state = _ActiveSlot(req, slot, list(resume[0]), resume[1])
+                    state = _ActiveSlot(req, slot, list(resume[0]), resume[1],
+                                        tier_idx=tier_idx)
                 state.pending_first = True
+                self._slot_tier[slot] = tier_idx
+                self._bump_tier_gauge(tier_idx, +1)
                 self._active[slot] = state
                 states.append(state)
             self._pending_tok0.append((states, tok0s))
@@ -1763,15 +1947,29 @@ class ServeSession:
             if resume is None:
                 self.stats.admitted += 1
                 self.stats.ttft_ticks.append(self.clock - req.arrival)
-                state = _ActiveSlot(req, slot, [tok0], self.clock)
+                state = _ActiveSlot(req, slot, [tok0], self.clock,
+                                    tier_idx=tier_idx)
             else:
                 state = _ActiveSlot(req, slot, list(resume[0]) + [tok0],
-                                    resume[1])
+                                    resume[1], tier_idx=tier_idx)
+            self._slot_tier[slot] = tier_idx
+            self._bump_tier_gauge(tier_idx, +1)
             self.stats.generated_tokens += 1
             if len(state.tokens) >= req.max_new or (eos >= 0 and tok0 == eos):
                 self._finish(state, "eos" if (eos >= 0 and tok0 == eos) else "length")
             else:
                 self._active[slot] = state
+
+    def _bump_tier_gauge(self, tier_idx: int, delta: int) -> None:
+        """Maintain the ``active_per_tier`` residency gauge (tier sessions
+        only): +1 at each admission, -1 at each release — exactly-once by
+        the same ``state.released`` discipline as the resources."""
+        if self.tiers is None:
+            return
+        self._tier_active_counts[tier_idx] += delta
+        self.stats.active_per_tier = {
+            t: int(c) for t, c in zip(self.tiers, self._tier_active_counts)
+        }
 
     def _release_resources(self, state: _ActiveSlot) -> None:
         """Free ``state``'s slot — and under the paged layout every held
@@ -1782,6 +1980,7 @@ class ServeSession:
         attention only after its next owner's prefill/decode writes
         overwrite the exposed positions."""
         state.released = True
+        self._bump_tier_gauge(state.tier_idx, -1)
         if self._active[state.slot] is state:   # a successor may already own it
             self._active[state.slot] = None
         self.pool.release(state.slot)
@@ -1809,6 +2008,7 @@ class ServeSession:
             finish_reason=reason,
             admitted_tick=state.admitted_tick,
             finished_tick=self.clock,
+            tier=self.tiers[state.tier_idx] if self.tiers is not None else "",
         )
 
     def _ensure_blocks(self, slot: int, hi: int) -> None:
@@ -1930,6 +2130,29 @@ class ServeSession:
             batch.append(req)
         return batch, budget, stalled
 
+    def _eff_tier(self, req: Request) -> int:
+        """The ladder rung ``req`` admits at RIGHT NOW: the requested rung,
+        demoted to the current shed level when that is lower-quality (higher
+        index).  A preemption victim replays at the rung it originally
+        admitted under — re-deciding would break the bit-identical replay
+        (the snapshotted tokens were generated by the original rung)."""
+        resume = self._preempt_resume.get(req.req_id)
+        if resume is not None:
+            return resume[2]
+        want = self.tiers.index(req.tier) if req.tier is not None else 0
+        return max(want, self._shed_level)
+
+    def _group_by_tier(
+        self, batch: List[Request]
+    ) -> List[Tuple[int, List[Request]]]:
+        """Split an admission batch by effective rung (admission order kept
+        inside each group, groups in ladder order) — each group prefills
+        under its own rung config in one dispatch."""
+        groups: Dict[int, List[Request]] = {}
+        for r in batch:
+            groups.setdefault(self._eff_tier(r), []).append(r)
+        return sorted(groups.items())
+
     def _admit_phase(self) -> None:
         """Admit ready requests in policy order, subject to free slots,
         (paged) the block-pool reservation, and the interleaving budget —
@@ -1941,7 +2164,11 @@ class ServeSession:
             stalled = stalled or st
             if not batch:
                 break                 # head doesn't fit the pool/budget yet
-            self._admit_many(batch)   # sync loop: may free slots again
+            if self.tiers is None:
+                self._admit_many(batch)   # sync loop: may free slots again
+            else:
+                for t, group in self._group_by_tier(batch):
+                    self._admit_many(group, tier_idx=t)
         if stalled:
             self.stats.prefill_stall_ticks += 1
         self.stats.peak_active = max(self.stats.peak_active, self.n_active)
@@ -2155,11 +2382,109 @@ class ServeSession:
         context for the zero-recompile contract to hold."""
         return self.mesh if self.mesh is not None else contextlib.nullcontext()
 
+    # -- quality tiers: load shedding and per-rung dispatch -------------------
+
+    def _current_decode_gap(self) -> int:
+        """LIVE starvation signal: worst work-tick gap since a resident
+        row's latest accepted token (``max_decode_gap_ticks`` is its
+        monotone high-water mark — useless for a shedder that must observe
+        recovery)."""
+        g = 0
+        for slot, state in enumerate(self._active):
+            if state is None or state.done or state.released:
+                continue
+            g = max(g, int(self.stats.work_ticks - self._last_emit_work[slot]))
+        return g
+
+    def _update_shed(self) -> None:
+        """Load-adaptive shedding, once per step before admission.  A BREACH
+        — ready-queue depth above ``shed_queue_depth`` or the live decode
+        gap above ``shed_gap_ticks`` — raises the shed level one rung (new
+        admissions then serve at ``max(requested, level)``); recovery only
+        lowers it after ``shed_hold_steps`` CONSECUTIVE steps below
+        ``shed_restore_fraction`` of the breach thresholds, and the
+        consecutive-step window clears on every level change or unhealthy
+        step — the same measure-a-full-window-per-rung hysteresis contract
+        as ``_update_draft_k``, so the level cannot flap."""
+        if not self._shed_on:
+            return
+        depth = len(self._ready)
+        gap = self._current_decode_gap()
+        breach = (
+            (self.shed_queue_depth is not None
+             and depth > self.shed_queue_depth)
+            or (self.shed_gap_ticks is not None and gap > self.shed_gap_ticks)
+        )
+        if breach:
+            self._shed_ok_steps = 0
+            if self._shed_level + 1 < len(self.tiers):
+                self._shed_level += 1
+                self.stats.tier_demotions += 1
+                self.stats.shed_level = self._shed_level
+            return
+        healthy = (
+            (self.shed_queue_depth is None
+             or depth <= self.shed_restore_fraction * self.shed_queue_depth)
+            and (self.shed_gap_ticks is None
+                 or gap <= self.shed_restore_fraction * self.shed_gap_ticks)
+        )
+        if not healthy:
+            self._shed_ok_steps = 0
+            return
+        if self._shed_level == 0:
+            return
+        self._shed_ok_steps += 1
+        if self._shed_ok_steps >= self.shed_hold_steps:
+            self._shed_level -= 1
+            self.stats.tier_restorations += 1
+            self.stats.shed_level = self._shed_level
+            self._shed_ok_steps = 0
+
+    def _dispatch_tier_chunks(self, active, tables, block_size, steps):
+        """One ``_decode_tick`` dispatch per ladder rung holding >= 1 active
+        row, chaining the cache (and, async, the device token carry) through
+        the rung dispatches in ladder order.  Each dispatch masks ``active``
+        down to its rung's rows and makes the OTHER rungs' resident rows
+        write-inert the same way released rows already are — paged: their
+        table rows scrubbed to the sentinel in this rung's copy, so every KV
+        scatter drops; slots: their ``cur_len`` pinned to ``max_len``, so
+        every positional ``.at[].set`` lands out of bounds and drops (do not
+        swap either path for a clamping primitive — see ``_decode_tick``).
+        In-program ``where(active, toks, 0)`` zeroes non-rung rows' tokens,
+        so the per-rung outputs merge by elementwise sum.  Returns the
+        (still in-flight) per-rung token futures."""
+        async_ = self.loop == "async"
+        parts = []
+        for t in range(len(self.tiers)):
+            mask = active & (self._slot_tier == t)
+            if not mask.any():
+                continue
+            if self.layout == "paged":
+                tb, cl = tables.copy(), self._cur_len.copy()
+                tb[~mask, :] = self.num_blocks
+            else:
+                tb = None
+                cl = np.where(mask, self._cur_len, self.max_len)
+                cl = cl.astype(np.int32)
+            self.cache, toks_f, lt = _decode_tick_jit(
+                cfg=self._tier_cfgs[t], params=self.params, cache=self.cache,
+                last_token=self._lt_dev if async_ else self._last_token,
+                cur_len=cl, active=mask,
+                slot_keys=self._sk_dev if async_ else self._slot_keys,
+                tables=tb, sampling=self.sampling, steps=steps,
+                block_size=block_size, attn_impl=self.attn_impl,
+            )
+            if async_:
+                self._lt_dev = lt
+            parts.append(toks_f)
+        return parts
+
     def _step_sync(self) -> List[CompletedRequest]:
         """PR-3 strictly-alternating loop: dispatch one chunk, block on its
         tokens, then do every piece of bookkeeping — the parity baseline the
         async loop is benchmarked against."""
         self._pull_arrivals()
+        self._update_shed()
         self._admit_phase()
 
         if self.n_active == 0:
@@ -2207,15 +2532,23 @@ class ServeSession:
                     self._last_token[slot] = int(toks[na - 1, slot])
             return self._drain_finished()
 
-        self.cache, toks, _ = _decode_tick_jit(
-            cfg=self.cfg, params=self.params, cache=self.cache,
-            last_token=self._last_token, cur_len=self._cur_len,
-            active=active, slot_keys=self._slot_keys, tables=tables,
-            sampling=self.sampling, steps=steps, block_size=block_size,
-            attn_impl=self.attn_impl,
-        )
+        if self.tiers is not None:
+            parts = self._dispatch_tier_chunks(active, tables, block_size, steps)
+        else:
+            self.cache, toks_f, _ = _decode_tick_jit(
+                cfg=self.cfg, params=self.params, cache=self.cache,
+                last_token=self._last_token, cur_len=self._cur_len,
+                active=active, slot_keys=self._slot_keys, tables=tables,
+                sampling=self.sampling, steps=steps, block_size=block_size,
+                attn_impl=self.attn_impl,
+            )
+            parts = [toks_f]
         tb = time.perf_counter()
-        toks = np.asarray(toks)                  # (steps, N)
+        toks = np.asarray(parts[0])              # (steps, N)
+        for p in parts[1:]:
+            # per-rung chunks carry disjoint row masks (zeros elsewhere),
+            # so the merged chunk is the elementwise sum
+            toks = toks + np.asarray(p)
         self.stats.host_block_s += time.perf_counter() - tb
         self.clock += steps
         self.stats.ticks += steps
@@ -2265,6 +2598,7 @@ class ServeSession:
         finish bookkeeping for chunk N overlap the device computing N+1."""
         self._release_predicted_done()
         self._pull_arrivals()
+        self._update_shed()
         self._admit_phase()
 
         prev, new = self._inflight, None
@@ -2297,17 +2631,24 @@ class ServeSession:
                     self.max_len - 1,
                 ).astype(np.int32)
             else:
-                # cur_len is copied because the host mutates it while the
-                # chunk is in flight (numpy operands may be aliased
-                # zero-copy by the device buffer); `active` and `tables`
-                # are fresh arrays already
-                self.cache, toks_f, self._lt_dev = _decode_tick_jit(
-                    cfg=self.cfg, params=self.params, cache=self.cache,
-                    last_token=self._lt_dev, cur_len=self._cur_len.copy(),
-                    active=active, slot_keys=self._sk_dev, tables=tables,
-                    sampling=self.sampling, steps=steps,
-                    block_size=block_size, attn_impl=self.attn_impl,
-                )
+                if self.tiers is not None:
+                    # per-rung dispatches (each masks cur_len/tables itself
+                    # with fresh arrays and chains _lt_dev through)
+                    toks_f = tuple(self._dispatch_tier_chunks(
+                        active, tables, block_size, steps
+                    ))
+                else:
+                    # cur_len is copied because the host mutates it while the
+                    # chunk is in flight (numpy operands may be aliased
+                    # zero-copy by the device buffer); `active` and `tables`
+                    # are fresh arrays already
+                    self.cache, toks_f, self._lt_dev = _decode_tick_jit(
+                        cfg=self.cfg, params=self.params, cache=self.cache,
+                        last_token=self._lt_dev, cur_len=self._cur_len.copy(),
+                        active=active, slot_keys=self._sk_dev, tables=tables,
+                        sampling=self.sampling, steps=steps,
+                        block_size=block_size, attn_impl=self.attn_impl,
+                    )
                 self.clock += steps
                 self.stats.ticks += steps
                 self.stats.work_ticks += steps
@@ -2336,7 +2677,14 @@ class ServeSession:
         admit-time first tokens queued since the previous harvest, then the
         chunk's tokens for the rows that were live at its dispatch."""
         tb = time.perf_counter()
-        toks = np.asarray(fl.toks)               # (steps, N)
+        if isinstance(fl.toks, tuple):
+            # quality tiers: per-rung chunk parts with disjoint row masks
+            # (zeros elsewhere) — the merged chunk is the elementwise sum
+            toks = np.asarray(fl.toks[0])
+            for p in fl.toks[1:]:
+                toks = toks + np.asarray(p)
+        else:
+            toks = np.asarray(fl.toks)           # (steps, N)
         n_acc = np.asarray(fl.n_acc) if fl.n_acc is not None else None
         pend, self._pending_tok0 = self._pending_tok0, []
         drained = [(states, np.asarray(t0s)) for states, t0s in pend]
@@ -2445,6 +2793,9 @@ class ServeSession:
             self._cl_dev = _pin_carry_jit(self._cl_dev)
             self._base_key = _pin_carry_jit(self._base_key)
         widths = sorted({self._admit_width(n) for n in range(1, self.num_slots + 1)})
+        # quality tiers: every program that keys on the model config compiles
+        # once PER LADDER RUNG (serving never dispatches the base cfg then)
+        warm_cfgs = self._tier_cfgs if self.tiers is not None else (self.cfg,)
         for A in widths:
             for b in self.buckets.sizes:
                 prompts = np.zeros((A, b), np.int32)
@@ -2452,33 +2803,36 @@ class ServeSession:
                 slots = np.arange(A, dtype=np.int32)
                 valid = np.zeros((A,), bool)    # all rows no-op: state safe
                 req_ids = np.zeros((A,), np.int32)
-                if self.layout == "paged":
-                    nb = -(-b // self.block_size)
-                    out = _admit_fused_paged_jit(
-                        cfg=self.cfg, params=self.params, cache=self.cache,
-                        prompts=prompts, prompt_lens=prompt_lens,
-                        # all-sentinel ids: every scatter dropped, state safe
-                        block_ids=np.full((A, nb), self.num_blocks, np.int32),
-                        req_ids=req_ids, base_key=self._base_key,
-                        sampling=self.sampling, block_size=self.block_size,
-                    )
-                elif self.prefill_mode == "fused":
-                    out = _admit_fused_jit(
-                        cfg=self.cfg, params=self.params, cache=self.cache,
-                        prompts=prompts, prompt_lens=prompt_lens, slots=slots,
-                        valid=valid, req_ids=req_ids, base_key=self._base_key,
-                        sampling=self.sampling,
-                    )
-                else:
-                    out = _admit_decode_jit(
-                        cfg=self.cfg, params=self.params, cache=self.cache,
-                        prompts=prompts, prompt_lens=prompt_lens, slots=slots,
-                        valid=valid, req_ids=req_ids, base_key=self._base_key,
-                        sampling=self.sampling,
-                        max_len=self.max_len, cache_dtype=self.cache_dtype,
-                    )
-                jax.block_until_ready(out)
-                self.cache = out[0]
+                for acfg in warm_cfgs:
+                    if self.layout == "paged":
+                        nb = -(-b // self.block_size)
+                        out = _admit_fused_paged_jit(
+                            cfg=acfg, params=self.params, cache=self.cache,
+                            prompts=prompts, prompt_lens=prompt_lens,
+                            # all-sentinel ids: every scatter dropped,
+                            # state safe
+                            block_ids=np.full((A, nb), self.num_blocks,
+                                              np.int32),
+                            req_ids=req_ids, base_key=self._base_key,
+                            sampling=self.sampling, block_size=self.block_size,
+                        )
+                    elif self.prefill_mode == "fused":
+                        out = _admit_fused_jit(
+                            cfg=acfg, params=self.params, cache=self.cache,
+                            prompts=prompts, prompt_lens=prompt_lens,
+                            slots=slots, valid=valid, req_ids=req_ids,
+                            base_key=self._base_key, sampling=self.sampling,
+                        )
+                    else:
+                        out = _admit_decode_jit(
+                            cfg=acfg, params=self.params, cache=self.cache,
+                            prompts=prompts, prompt_lens=prompt_lens,
+                            slots=slots, valid=valid, req_ids=req_ids,
+                            base_key=self._base_key, sampling=self.sampling,
+                            max_len=self.max_len, cache_dtype=self.cache_dtype,
+                        )
+                    jax.block_until_ready(out)
+                    self.cache = out[0]
             # the async admit-carry merge compiles once per admit width;
             # all-False valid keeps the device carry content intact.  tok0s
             # and keys are jnp arrays on purpose: the real calls pass admit-
@@ -2528,19 +2882,20 @@ class ServeSession:
                 if dev_carry:
                     self._lt_dev, self._cl_dev = out[3], out[4]
         else:
-            out = _decode_tick_jit(
-                cfg=self.cfg, params=self.params, cache=self.cache,
-                last_token=self._lt_dev if dev_carry else self._last_token,
-                cur_len=self._cur_len.copy(),
-                active=np.zeros((self.num_slots,), bool),
-                slot_keys=self._sk_dev if dev_carry else self._slot_keys,
-                tables=self._tables.copy() if self.layout == "paged" else None,
-                sampling=self.sampling, steps=self.steps_per_tick,
-                block_size=self.block_size if self.layout == "paged" else 0,
-                attn_impl=self.attn_impl,
-            )
-            jax.block_until_ready(out)
-            self.cache = out[0]
+            for tcfg in warm_cfgs:
+                out = _decode_tick_jit(
+                    cfg=tcfg, params=self.params, cache=self.cache,
+                    last_token=self._lt_dev if dev_carry else self._last_token,
+                    cur_len=self._cur_len.copy(),
+                    active=np.zeros((self.num_slots,), bool),
+                    slot_keys=self._sk_dev if dev_carry else self._slot_keys,
+                    tables=self._tables.copy() if self.layout == "paged" else None,
+                    sampling=self.sampling, steps=self.steps_per_tick,
+                    block_size=self.block_size if self.layout == "paged" else 0,
+                    attn_impl=self.attn_impl,
+                )
+                jax.block_until_ready(out)
+                self.cache = out[0]
         if self.layout == "paged" and self.prefix_sharing:
             # copy-on-write fork program: src == dst makes the warmup copy a
             # content no-op; src/dst are traced, so this one compile serves

@@ -139,6 +139,9 @@ def test_stats_field_docs_complete():
     # PR-8 tensor-parallel + dynamic-draft readouts
     assert {"tp", "devices", "peak_block_bytes_per_device",
             "draft_k_current", "draft_k_shrinks", "draft_k_grows"} <= documented
+    # PR-9 quality-tier / load-shedder gauges
+    assert {"tier_demotions", "tier_restorations", "shed_level",
+            "active_per_tier"} <= documented
 
 
 # ---------------------------------------------------------------------------
@@ -281,6 +284,31 @@ def test_serve_async_bench_smoke():
     assert r["oracle_mismatches"] == 0
     assert r["sync_tok_s"] > 0 and r["async_tok_s"] > 0
     assert r["ratio_max_decode_gap_ticks"] <= r["ratio_gap_bound"]
+    assert set(r["field_docs"])  # embedded metric docs travel with the JSON
+
+
+@pytest.mark.slow
+def test_serve_tiers_bench_smoke():
+    """The quality-tier bench harness: a miniature spike must run all three
+    arms (exact_only / static_tiers / shed) with zero recompiles, a
+    bit-transparent exact rung (match fraction exactly 1.0), in-range
+    quality readouts for every rung, and a shedder that actually demotes
+    under the burst (the modeled-throughput win criterion is asserted on
+    the real bench config, solo-run — this pins the machinery)."""
+    import benchmarks.serve_tiers as B
+
+    r = B.bench(requests=9, shed_queue_depth=2)
+    assert r["recompiles_after_warmup"] == 0
+    q = r["arms"]["static_tiers"]["quality_vs_exact_oracle"]
+    assert q["exact"]["token_match_fraction"] == 1.0
+    for t, row in q.items():
+        assert row["requests"] > 0
+        assert 0.0 <= row["token_match_fraction"] <= 1.0
+        assert row["modeled_delay_ns"] > 0
+    shed = r["arms"]["shed"]
+    assert shed["tier_demotions"] >= 1
+    assert shed["modeled_mac_tok_per_us"] > \
+        r["arms"]["exact_only"]["modeled_mac_tok_per_us"]
     assert set(r["field_docs"])  # embedded metric docs travel with the JSON
 
 

@@ -163,9 +163,17 @@ def test_resolve_execution_mode():
     a = resolve_execution_mode("approx", "mul8x8_3")
     assert a.mode == "pallas" and a.multiplier == "mul8x8_3"
     assert resolve_execution_mode("approx_lowrank").mode == "lowrank"
+    # approx_msr routes to the MSR fixed-shift family: an MSR multiplier
+    # name passes through, anything else falls back to mul8x8_msr4
+    m = resolve_execution_mode("approx_msr", "mul8x8_msr2")
+    assert m.mode == "pallas" and m.multiplier == "mul8x8_msr2"
+    m = resolve_execution_mode("approx_msr", "mul8x8_2")
+    assert m.mode == "pallas" and m.multiplier == "mul8x8_msr4"
+    assert resolve_execution_mode("approx_msr", act_per_row=True).act_per_row
     with pytest.raises(ValueError):
         resolve_execution_mode("nope")
-    assert set(EXECUTION_MODES) == {"exact", "exact_quant", "approx", "approx_lowrank"}
+    assert set(EXECUTION_MODES) == {
+        "exact", "exact_quant", "approx", "approx_lowrank", "approx_msr"}
 
 
 def test_generate_with_frozen_weights():

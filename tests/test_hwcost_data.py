@@ -3,11 +3,14 @@ import numpy as np
 import pytest
 
 from repro.core.hwcost import (
+    COST_TABLE,
     PAPER_TABLE_VI,
     PAPER_TABLE_VII,
+    mac_cost,
     systolic_array_cost,
     unit_gate_estimate,
 )
+from repro.core.multipliers import MSR_SPECS, MULTIPLIERS
 from repro.data.synthetic import image_dataset, token_batches
 
 
@@ -35,6 +38,33 @@ def test_unit_gate_trend():
     assert e3 < e2
 
 
+def test_cost_table_covers_every_registered_multiplier():
+    """Serve-time quality tiers read modeled throughput from COST_TABLE, so
+    EVERY name in the multiplier registry must have a row (and paper-
+    synthesized rows must be the Table VII data, not estimates)."""
+    assert set(MULTIPLIERS) <= set(COST_TABLE)
+    assert COST_TABLE["exact"] == PAPER_TABLE_VII["exact8x8"]
+    assert COST_TABLE["pkm"] == PAPER_TABLE_VII["pkm"]
+    assert mac_cost("exact8x8") == COST_TABLE["exact"]
+    for name, row in COST_TABLE.items():
+        assert row.area_um2 > 0 and row.power_mw > 0 and row.delay_ns > 0, name
+
+
+def test_msr_cost_rows_follow_the_truncation_model():
+    """The MSR delay model is monotone in keep_bits (fewer partial-product
+    rows -> shallower add tree), every MSR rung beats the exact critical
+    path, and msr2 (2 kept bits) is the cheapest design in the table."""
+    exact = COST_TABLE["exact"]
+    delays = {n: COST_TABLE[n].delay_ns for n in MSR_SPECS}
+    assert all(d < exact.delay_ns for d in delays.values())
+    ordered = sorted(MSR_SPECS, key=lambda n: MSR_SPECS[n].keep_bits)
+    assert [delays[n] for n in ordered] == sorted(delays.values())
+    assert min(COST_TABLE, key=lambda n: COST_TABLE[n].delay_ns) == ordered[0]
+    for n in MSR_SPECS:
+        assert COST_TABLE[n].area_um2 < exact.area_um2
+        assert COST_TABLE[n].power_mw < exact.power_mw
+
+
 def test_systolic_rollup():
     c = systolic_array_cost("mul8x8_2")
     assert c["macs"] == 128 * 128
@@ -42,6 +72,9 @@ def test_systolic_rollup():
     assert 0 < c["power_saving_pct"] < 30
     ex = systolic_array_cost("exact")
     assert ex["area_saving_pct"] == pytest.approx(0.0)
+    # estimated rows (MSR family) roll up through the same path
+    msr = systolic_array_cost("mul8x8_msr4")
+    assert msr["delay_saving_pct"] > 0 and msr["area_saving_pct"] > 0
 
 
 def test_image_dataset_learnable_and_deterministic():

@@ -13,9 +13,10 @@ otherwise a deterministic seeded fallback with the same assertions.
 approx-matmul coverage axes:
 * random M/N/K including odd / prime / non-multiple-of-block sizes;
 * leading batch dimensions on the lhs (1 and 2 extra dims);
-* every kernel-supported multiplier (the aggregated designs with a low-rank
-  factorization: exact + mul8x8_1/2/3 — pkm/etm have no aggregation spec,
-  so the kernel rejects them, pinned below);
+* EVERY registered multiplier family — aggregated (exact + mul8x8_1/2/3,
+  low-rank indicator corrections), truncation (pkm/etm, generic "lut"-kind
+  corrections), and the MSR fixed-shift family (mul8x8_msr2/4/6) — all
+  route through the same fused kernel decomposition;
 * pruned operand ranges (the paper's co-optimized (0,31) bands).
 
 Marked ``slow``: each example runs interpret-mode kernel work; CI runs
@@ -36,11 +37,10 @@ from repro.kernels.paged_attention import (
 
 pytestmark = pytest.mark.slow
 
-# Multipliers the Pallas/low-rank path supports: those with an aggregation
-# spec (lowrank.build_correction). pkm/etm are LUT/ref-only designs.
-KERNEL_MULTIPLIERS = tuple(
-    name for name in M.MULTIPLIERS if name not in ("pkm", "etm")
-)
+# Every registered multiplier runs through the Pallas kernel: aggregated
+# designs via the low-rank indicator corrections, pkm/etm/MSR via the
+# generic per-bit "lut"-kind corrections (both exact by construction).
+KERNEL_MULTIPLIERS = M.MULTIPLIERS
 
 
 def _codes(rng: np.random.Generator, shape, high: int):
@@ -66,17 +66,18 @@ def _check(a, b, name: str):
 
 
 def test_kernel_multiplier_registry_is_exhaustive():
-    """Every registered multiplier either runs through the kernel or is
-    pinned as a known ref-only design — no silent third category."""
+    """EVERY registered multiplier builds a correction whose reconstructed
+    error table equals exact - LUT entrywise — the kernel decomposition's
+    exactness precondition, with no ref-only escape hatch left."""
     from repro.core import lowrank as lr
 
+    assert set(KERNEL_MULTIPLIERS) == set(M.MULTIPLIERS)
+    exact = M.exact_table(8, 8).astype(np.int64)
     for name in M.MULTIPLIERS:
-        if name in KERNEL_MULTIPLIERS:
-            lr.build_correction(name, side="rhs")   # must not raise
-        else:
-            with pytest.raises(KeyError):
-                lr.build_correction(name, side="rhs")
-    assert set(KERNEL_MULTIPLIERS) == {"exact", "mul8x8_1", "mul8x8_2", "mul8x8_3"}
+        for side in ("lhs", "rhs"):
+            corr = lr.build_correction(name, side=side)
+            err = exact - M.mul8x8_table(name).astype(np.int64)
+            assert np.array_equal(corr.error_table(), err), (name, side)
 
 
 @settings(max_examples=20, deadline=None)

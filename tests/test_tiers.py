@@ -1,0 +1,208 @@
+"""Quality-tier serving invariants (the MSR/approx execution-mode ladder).
+
+* **per-request bit-parity**: a mixed-tier session's greedy outputs are
+  bit-identical, request by request, to single-mode oracle sessions that
+  serve each rung's requests alone — across both host loops (sync/async),
+  both KV layouts (slots/paged), and both paged attention impls
+  (gather/pallas).  This is the load-bearing contract: per-row activation
+  scales (``act_per_row``) make batch rows independent, and the per-rung
+  dispatch masking (sentinel tables / OOB ``cur_len``) makes non-rung rows
+  write-inert, so batch composition can never leak across rungs.
+* **zero recompiles across tier mixes**: after ``warmup()`` every rung's
+  decode tick and admit program is compiled; serving any mix of rungs
+  afterwards must hit only cached programs.
+* **shed/restore hysteresis**: a burst beyond ``shed_queue_depth`` demotes
+  new admissions down the ladder (one rung per breach step); after the
+  queue drains, ``shed_hold_steps`` consecutive healthy steps restore one
+  rung at a time until back at the requested rung.
+* constructor/submit validation fails loudly.
+
+Marked ``slow``: CI runs this file in the kernel-differential step under
+``REPRO_FORCE_INTERPRET=1`` so the MSR rung exercises the real Pallas
+kernel body.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.serve import (
+    ServeSession,
+    resolve_execution_mode,
+    scheduler_compile_stats,
+)
+
+pytestmark = pytest.mark.slow
+
+KEY = jax.random.PRNGKey(0)
+TIERS = ("exact", "approx_lowrank", "approx_msr")
+TIER_MULTIPLIER = "mul8x8_2"
+
+
+def _cfg(**over):
+    return dataclasses.replace(
+        reduced_config(get_config("granite-3-2b")), remat=False, q_chunk=16,
+        **over,
+    )
+
+
+_PARAMS = {}
+
+
+def _params(cfg):
+    if cfg.name not in _PARAMS:
+        from repro.models.transformer import init_params
+
+        _PARAMS[cfg.name] = init_params(cfg, KEY)
+    return _PARAMS[cfg.name]
+
+
+def _session(cfg, **over):
+    kw = dict(num_slots=3, max_len=32, prompt_buckets=(4, 8))
+    kw.update(over)
+    return ServeSession(cfg, _params(cfg), **kw)
+
+
+def _tier_trace(rng, n):
+    """[(req_id, prompt, max_new, tier)] — rungs round-robin plus a
+    tier=None request (defaults to the best rung)."""
+    out = []
+    for i in range(n):
+        p = rng.integers(0, 512, int(rng.integers(2, 9)))
+        tier = None if i == n - 1 else TIERS[i % len(TIERS)]
+        out.append((i, p, int(rng.integers(2, 6)), tier))
+    return out
+
+
+def _serve(cfg, trace, **over):
+    sess = _session(cfg, **over)
+    for rid, p, n, tier in trace:
+        sess.submit(p, max_new=n, req_id=rid, tier=tier)
+    return sess.run()
+
+
+@pytest.mark.parametrize(
+    "loop,layout,attn",
+    [
+        ("sync", "slots", None),
+        ("sync", "paged", "gather"),
+        ("async", "slots", None),
+        ("async", "paged", "gather"),
+        ("async", "paged", "pallas"),
+    ],
+)
+def test_mixed_tiers_bit_identical_to_single_mode_oracles(loop, layout, attn):
+    cfg = _cfg()
+    rng = np.random.default_rng(3)
+    trace = _tier_trace(rng, 7)
+    kw = dict(loop=loop, cache_layout=layout)
+    if layout == "paged":
+        kw.update(block_size=8, attn_impl=attn)
+
+    mixed = _serve(cfg, trace, tiers=TIERS, tier_multiplier=TIER_MULTIPLIER,
+                   **kw)
+    assert set(mixed) == {rid for rid, *_ in trace}
+
+    for t in TIERS:
+        mine = [(rid, p, n, tier) for rid, p, n, tier in trace
+                if (tier or TIERS[0]) == t]
+        if not mine:
+            continue
+        # single-mode oracle: same execution config, no tier routing at all
+        ocfg = dataclasses.replace(
+            cfg, approx=resolve_execution_mode(t, TIER_MULTIPLIER,
+                                               act_per_row=True))
+        oracle = _serve(ocfg, [(rid, p, n, None) for rid, p, n, _ in mine],
+                        **kw)
+        for rid, *_ in mine:
+            assert mixed[rid].tier == t
+            assert np.array_equal(mixed[rid].tokens, oracle[rid].tokens), (
+                loop, layout, attn, t, rid)
+
+
+def test_zero_recompiles_across_tier_mixes():
+    """One warmed session serves three different rung mixes back to back —
+    all-exact, round-robin, all-MSR — with zero new compiles."""
+    cfg = _cfg()
+    rng = np.random.default_rng(5)
+    sess = _session(cfg, loop="async", cache_layout="paged", block_size=8,
+                    tiers=TIERS, tier_multiplier=TIER_MULTIPLIER)
+    sess.warmup()
+    before = dict(scheduler_compile_stats())
+    mixes = (
+        [TIERS[0]] * 4,
+        [TIERS[i % len(TIERS)] for i in range(5)],
+        [TIERS[-1]] * 4,
+    )
+    rid = 0
+    for mix in mixes:
+        for t in mix:
+            p = rng.integers(0, 512, int(rng.integers(2, 9)))
+            sess.submit(p, max_new=int(rng.integers(2, 5)), req_id=rid, tier=t)
+            rid += 1
+        sess.run()
+    assert scheduler_compile_stats() == before
+    assert len(sess.results) == rid
+
+
+def test_shed_demotes_and_hysteresis_restores():
+    cfg = _cfg()
+    rng = np.random.default_rng(11)
+    hold = 4
+    sess = _session(cfg, num_slots=2, cache_layout="paged", block_size=8,
+                    tiers=TIERS, tier_multiplier=TIER_MULTIPLIER,
+                    shed_queue_depth=2, shed_hold_steps=hold)
+    for i in range(10):
+        p = rng.integers(0, 512, int(rng.integers(2, 9)))
+        sess.submit(p, max_new=3, req_id=i, arrival=0)
+    sess.run()
+    st = sess.stats
+    assert st.tier_demotions >= 1
+    served = {r.tier for r in sess.results.values()}
+    assert served & set(TIERS[1:]), "spike never demoted an admission"
+    assert all(r.tier in TIERS for r in sess.results.values())
+    # restores are lazy: they need healthy steps to accumulate the hold
+    for _ in range(2 * hold * len(TIERS)):
+        sess.step()
+    assert sess.stats.shed_level == 0
+    assert sess.stats.tier_restorations >= 1
+    # post-drain admissions serve at the requested rung again
+    sess.submit(rng.integers(0, 512, 4), max_new=2, req_id=99)
+    res = sess.run()
+    assert res[99].tier == TIERS[0]
+
+
+def test_tier_gauges_track_active_rungs():
+    cfg = _cfg()
+    sess = _session(cfg, tiers=TIERS)
+    sess.submit(np.arange(1, 5), max_new=2, req_id=0, tier="approx_msr")
+    res = sess.run()
+    assert res[0].tier == "approx_msr"
+    # gauge decays back to zero once everything released
+    assert all(v == 0 for v in sess.stats.active_per_tier.values())
+
+
+def test_tiers_validation():
+    cfg = _cfg()
+    with pytest.raises(ValueError, match="tiers"):
+        _session(cfg, tiers=())
+    with pytest.raises(ValueError, match="duplicate"):
+        _session(cfg, tiers=("exact", "exact"))
+    with pytest.raises(ValueError, match="execution mode"):
+        _session(cfg, tiers=("exact", "nope"))
+    with pytest.raises(ValueError, match="spec_decode"):
+        _session(cfg, cache_layout="paged", block_size=8, spec_decode=True,
+                 tiers=TIERS)
+    with pytest.raises(ValueError, match="shed"):
+        _session(cfg, shed_queue_depth=4)           # shedder needs a ladder
+    with pytest.raises(ValueError, match="shed"):
+        _session(cfg, tiers=("exact",), shed_queue_depth=4)
+
+    sess = _session(cfg)
+    with pytest.raises(ValueError, match="tier"):
+        sess.submit(np.arange(1, 4), max_new=2, tier="exact")
+    tiered = _session(cfg, tiers=TIERS)
+    with pytest.raises(ValueError, match="tier"):
+        tiered.submit(np.arange(1, 4), max_new=2, tier="nope")
