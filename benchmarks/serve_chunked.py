@@ -1,0 +1,294 @@
+"""Chunked prefill vs one-shot prefill on a bursty long-prompt trace.
+
+Both arms drive the SAME trace through ``repro.serve.scheduler.ServeSession``
+(paged cache, async loop) at the SAME interleaving budget
+(``prefill_decode_ratio``); the only difference is ``chunked_prefill``:
+
+* **unchunked** — a long prompt prefills in ONE bucket-wide dispatch.  Under
+  the budget its admission stalls until resident decodes drain, and when it
+  finally lands the work-tick clock jumps a whole prompt bucket — decodes
+  starve by up to a bucket, and every request queued behind the monolith
+  (no skip-ahead) inherits the wait;
+* **chunked** — the same prompt is split into ``prefill_chunk``-wide chunks
+  dispatched across successive steps and interleaved with decode, so each
+  step's prefill work is bounded by one CHUNK bucket per resident prefill
+  and short requests behind the long head admit steps earlier.
+
+The trace is a decode-heavy short-prompt background stream punctured by
+clumps of long prompts — the burst regime the chunk scheduler exists for.
+Outputs must stay bit-identical across arms (the chunk path reads the
+written prefix through the block table; same logits, same sampling keys),
+so the win is purely scheduling, measured as:
+
+* ``short_ttft_p95_ticks`` — p95 first-token latency over the SHORT
+  (background) requests, from the per-request ``CompletedRequest.ttft``;
+* ``max_decode_gap_ticks`` — the starvation gauge (worst work-tick gap
+  between a resident row's consecutive accepted tokens).
+
+The JSON artifact (``BENCH_serve_chunked.json``) records both gauges per
+arm, per-arm tokens/s (best of ``--repeats`` interleaved fresh runs),
+cross-arm token mismatches (must be 0), a standalone-``generate`` oracle
+(must be 0 mismatches), recompiles after warmup (must be 0), the equal
+per-arm total-token schedule, and ``SchedulerStats.DOCS`` under
+``field_docs`` so every metric key is self-describing.
+
+    PYTHONPATH=src python benchmarks/serve_chunked.py
+    PYTHONPATH=src python benchmarks/serve_chunked.py --smoke --out /tmp/b.json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import numpy as np
+
+BUCKETS = (8, 16, 32)
+MAX_LEN = 96
+BLOCK_SIZE = 8
+PREFILL_CHUNK = 8
+SHORT_PLEN = 10           # requests below this count as "short" for TTFT
+ORACLE_REQUESTS = 6       # standalone-generate checks (one compile per shape)
+
+
+def _tiny_cfg(exec_mode: str = "exact"):
+    from repro.configs import get_config, reduced_config
+    from repro.serve.engine import resolve_execution_mode
+
+    # small enough that scheduling effects dominate a decode chunk — the
+    # gauges under test are deterministic tick counts, not wall time
+    return dataclasses.replace(
+        reduced_config(get_config("granite-3-2b")),
+        num_layers=2, d_model=128, num_heads=2, num_kv_heads=1, head_dim=64,
+        d_ff=256, vocab_size=1024, remat=False, q_chunk=64, dtype="float32",
+        approx=resolve_execution_mode(exec_mode),
+    )
+
+
+def build_trace(short: int, long: int, vocab: int, seed: int = 0):
+    """[(prompt, max_new, arrival)]: ``short`` decode-heavy background
+    requests on a Poisson clock with ``long`` bucket-topping prompts clumped
+    into bursts every few arrivals — each burst lands a monolith (or a chunk
+    train) in front of the background stream."""
+    rng = np.random.default_rng(seed)
+    trace, t, li = [], 0, 0
+    for i in range(short + long):
+        if li < long and i % 4 == 3:      # burst member: long prompt
+            plen = int(rng.integers(24, 33))
+            max_new = int(rng.integers(6, 13))
+            li += 1
+        else:                             # background: short, decode-heavy
+            t += int(rng.poisson(2.0))
+            plen = int(rng.integers(2, SHORT_PLEN))
+            max_new = int(rng.integers(16, 33))
+        trace.append((rng.integers(0, vocab, plen).astype(np.int32),
+                      max_new, t))
+    return trace
+
+
+def _server(cfg, params, trace, *, chunked: bool, num_slots: int,
+            steps_per_tick: int, ratio: float):
+    from repro.serve.scheduler import ServeSession
+
+    def serve():
+        kw = dict(chunked_prefill=True, prefill_chunk=PREFILL_CHUNK) \
+            if chunked else {}
+        sess = ServeSession(
+            cfg, params, num_slots=num_slots, max_len=MAX_LEN,
+            prompt_buckets=BUCKETS, steps_per_tick=steps_per_tick,
+            cache_layout="paged", block_size=BLOCK_SIZE, loop="async",
+            prefill_decode_ratio=ratio, **kw,
+        )
+        for p, n, t in trace:
+            sess.submit(p, max_new=n, arrival=t)
+        sess.run()
+        return sess
+
+    return serve
+
+
+def _p95(xs):
+    return float(np.percentile(np.asarray(xs, np.float64), 95)) if xs else -1.0
+
+
+def bench(exec_mode: str = "exact", short: int = 30, long: int = 10,
+          seed: int = 0, num_slots: int = 8, steps_per_tick: int = 1,
+          repeats: int = 3, ratio: float = 8.0, oracle: int = ORACLE_REQUESTS):
+    from repro.models.transformer import init_params
+    from repro.serve.engine import generate
+    from repro.serve.scheduler import SchedulerStats, scheduler_compile_stats
+
+    cfg = _tiny_cfg(exec_mode)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    trace = build_trace(short, long, cfg.vocab_size, seed=seed)
+    servers = {
+        name: _server(cfg, params, trace, chunked=(name == "chunked"),
+                      num_slots=num_slots, steps_per_tick=steps_per_tick,
+                      ratio=ratio)
+        for name in ("unchunked", "chunked")
+    }
+    for serve in servers.values():
+        serve().warmup()                 # any program the trace missed
+    before = scheduler_compile_stats()
+    best = {}
+    # interleaved best-of: a CPU contention episode taxes both arms
+    for _ in range(max(1, repeats)):
+        for name, serve in servers.items():
+            t0 = time.perf_counter()
+            sess = serve()
+            dt = time.perf_counter() - t0
+            if name not in best or dt < best[name][1]:
+                best[name] = (sess, dt)
+    recompiles = sum(scheduler_compile_stats().values()) - sum(before.values())
+
+    res = {name: sess.results for name, (sess, _) in best.items()}
+    mismatches = sum(
+        not np.array_equal(res["unchunked"][rid].tokens,
+                           res["chunked"][rid].tokens)
+        for rid in res["unchunked"]
+    )
+    oracle_mismatches = 0
+    oracle_ids = sorted(res["chunked"])[:oracle]
+    for rid in oracle_ids:
+        p, n, _ = trace[rid]
+        alone = np.asarray(
+            generate(cfg, params, p[None, :], max_new=n)
+        )[0, len(p):]
+        oracle_mismatches += not np.array_equal(alone, res["chunked"][rid].tokens)
+
+    short_ids = [i for i, (p, _, _) in enumerate(trace)
+                 if p.size < SHORT_PLEN]
+    arms = {}
+    for name, (sess, dt) in best.items():
+        st = sess.stats
+        useful = sum(len(r.tokens) for r in res[name].values())
+        arms[name] = {
+            "tok_s": round(useful / dt, 1),
+            "best_s": round(dt, 4),
+            "max_decode_gap_ticks": st.max_decode_gap_ticks,
+            "short_ttft_p95_ticks": _p95(
+                [res[name][i].ttft for i in short_ids]
+            ),
+            "ttft_p95_ticks_all": round(st.ttft_p95, 2),
+            "prefill_stall_ticks": st.prefill_stall_ticks,
+            "prefill_chunks": st.prefill_chunks,
+            "prefill_tokens": st.prefill_tokens,
+            "ticks": st.ticks,
+        }
+    return {
+        "bench": "serve_chunked",
+        "exec_mode": exec_mode,
+        "requests": short + long,
+        "short_requests": len(short_ids),
+        "seed": seed,
+        "num_slots": num_slots,
+        "steps_per_tick": steps_per_tick,
+        "repeats_best_of": repeats,
+        "prompt_buckets": list(BUCKETS),
+        "prefill_chunk": PREFILL_CHUNK,
+        "prefill_decode_ratio": ratio,
+        "max_len": MAX_LEN,
+        "block_size": BLOCK_SIZE,
+        "cache_layout": "paged",
+        # unchanged total-token schedule: the win is scheduling, not work
+        "total_tokens": {
+            name: sum(len(r.tokens) for r in res[name].values())
+            for name in res
+        },
+        "arms": arms,
+        "gap_improvement_ticks": (
+            arms["unchunked"]["max_decode_gap_ticks"]
+            - arms["chunked"]["max_decode_gap_ticks"]
+        ),
+        "short_ttft_p95_improvement_ticks": round(
+            arms["unchunked"]["short_ttft_p95_ticks"]
+            - arms["chunked"]["short_ttft_p95_ticks"], 2
+        ),
+        "token_mismatches": mismatches,
+        "oracle_requests": len(oracle_ids),
+        "oracle_mismatches": oracle_mismatches,
+        "recompiles_after_warmup": recompiles,
+        "field_docs": dict(SchedulerStats.DOCS),
+    }
+
+
+def run(exec_mode: str = "exact", requests: int = 40):
+    """benchmarks/run.py entry: (name, us_per_call, derived) rows."""
+    r = bench(exec_mode=exec_mode, short=(requests * 3) // 4,
+              long=requests - (requests * 3) // 4)
+    u, c = r["arms"]["unchunked"], r["arms"]["chunked"]
+    return [
+        (f"serve/chunked_{exec_mode}", 1e6 / c["tok_s"],
+         f"{c['tok_s']} tok/s gap={c['max_decode_gap_ticks']} "
+         f"short_ttft_p95={c['short_ttft_p95_ticks']}"),
+        (f"serve/unchunked_baseline_{exec_mode}", 1e6 / u["tok_s"],
+         f"{u['tok_s']} tok/s gap={u['max_decode_gap_ticks']} "
+         f"short_ttft_p95={u['short_ttft_p95_ticks']}"),
+        (f"serve/chunked_win_{exec_mode}", 0.0,
+         f"gap -{r['gap_improvement_ticks']} ticks, short ttft p95 "
+         f"-{r['short_ttft_p95_improvement_ticks']} ticks, "
+         f"mismatches={r['token_mismatches']}"),
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--exec", dest="exec_mode", default="exact",
+                    choices=("exact", "exact_quant", "approx", "approx_lowrank"))
+    ap.add_argument("--short", type=int, default=30,
+                    help="background short requests (TTFT population)")
+    ap.add_argument("--long", type=int, default=10,
+                    help="burst long-prompt requests")
+    ap.add_argument("--num-slots", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=1)
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timed passes per arm; best-of wins (contention guard)")
+    ap.add_argument("--ratio", type=float, default=8.0,
+                    help="prefill_decode_ratio, identical in BOTH arms")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: small trace, single repeat — checks "
+                         "machinery (parity/recompiles), not the win bars")
+    ap.add_argument("--out", default="BENCH_serve_chunked.json")
+    args = ap.parse_args()
+    kw = dict(exec_mode=args.exec_mode, short=args.short, long=args.long,
+              seed=args.seed, num_slots=args.num_slots,
+              steps_per_tick=args.steps, repeats=args.repeats,
+              ratio=args.ratio)
+    if args.smoke:
+        kw.update(short=8, long=4, repeats=1, oracle=3)
+    r = bench(**kw)
+    with open(args.out, "w") as f:
+        json.dump(r, f, indent=2)
+        f.write("\n")
+    print(json.dumps({k: v for k, v in r.items() if k != "field_docs"}, indent=2))
+    failures = []
+    if r["token_mismatches"]:
+        failures.append(f"{r['token_mismatches']} cross-arm token mismatches")
+    if r["oracle_mismatches"]:
+        failures.append(f"{r['oracle_mismatches']} standalone-generate mismatches")
+    if r["recompiles_after_warmup"]:
+        failures.append(f"{r['recompiles_after_warmup']} recompiles after warmup")
+    if r["total_tokens"]["chunked"] != r["total_tokens"]["unchunked"]:
+        failures.append("total-token schedule changed between arms")
+    if not args.smoke:
+        if r["gap_improvement_ticks"] <= 0:
+            failures.append(
+                "chunked arm did not lower max_decode_gap_ticks "
+                f"({r['arms']['unchunked']['max_decode_gap_ticks']} -> "
+                f"{r['arms']['chunked']['max_decode_gap_ticks']})")
+        if r["short_ttft_p95_improvement_ticks"] <= 0:
+            failures.append(
+                "chunked arm did not lower short-request p95 TTFT "
+                f"({r['arms']['unchunked']['short_ttft_p95_ticks']} -> "
+                f"{r['arms']['chunked']['short_ttft_p95_ticks']})")
+    for msg in failures:
+        print(f"FAIL: {msg}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

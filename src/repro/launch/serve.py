@@ -21,7 +21,10 @@ per-layer block gather for the in-place Pallas paged-attention kernel).  ``--loo
 (async double-buffered pipeline by default; ``sync`` is the PR-3 baseline),
 and ``--prefill-decode-ratio`` / ``--prefill-token-budget`` rate-limit
 admitted prefill tokens against resident decode work so long-prompt bursts
-cannot starve active decodes (see docs/serving.md).  ``--prefix-sharing``
+cannot starve active decodes (see docs/serving.md); ``--chunked-prefill``
+additionally splits each prompt into ``--prefill-chunk``-wide chunks
+interleaved with decode across steps, tightening the decode stall bound
+from one prompt bucket to one chunk.  ``--prefix-sharing``
 turns on refcounted copy-on-write prefix sharing over the block pool and
 ``--preemption`` replaces the worst-case block reservation with
 oversubscription + evict-and-replay; ``--pad-id`` sets the model's real pad
@@ -116,6 +119,16 @@ def main(argv=None):
     ap.add_argument("--prefill-token-budget", type=int, default=None,
                     help="continuous engine: flat per-step prefill token "
                          "budget (alternative to --prefill-decode-ratio)")
+    ap.add_argument("--chunked-prefill", action="store_true",
+                    help="paged layout: split each prompt's prefill into "
+                         "--prefill-chunk-wide chunks dispatched across "
+                         "successive steps and interleaved with decode "
+                         "under the prefill budget — a long prompt then "
+                         "stalls decode by at most one chunk, not one "
+                         "prompt bucket (outputs stay bit-identical)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked prefill: chunk width (must be one of the "
+                         "prompt buckets; default: the largest bucket)")
     ap.add_argument("--spec-decode", action="store_true",
                     help="paged layout: self-speculative decoding — each "
                          "tick runs --draft-k steps through the "
@@ -201,9 +214,11 @@ def main(argv=None):
         rng = np.random.default_rng(0)
         # bucket set covers --prompt-len; cache covers the longest request.
         # Preemption replays prompt + accepted tokens through prefill, so
-        # the buckets must also cover the longest possible replay prompt.
+        # the buckets must also cover the longest possible replay prompt —
+        # unless chunked prefill is on, which chunks any replay length
+        # through the existing buckets and needs no wider top.
         top = args.prompt_len
-        if args.preemption:
+        if args.preemption and not args.chunked_prefill:
             top = args.prompt_len + args.new - 1
         buckets = [8]
         while buckets[-1] < top:
@@ -232,6 +247,8 @@ def main(argv=None):
             num_blocks=args.num_blocks, policy=args.policy, loop=args.loop,
             prefill_decode_ratio=args.prefill_decode_ratio,
             prefill_token_budget=args.prefill_token_budget,
+            chunked_prefill=args.chunked_prefill,
+            prefill_chunk=args.prefill_chunk,
             attn_impl=args.attn_impl, pad_id=args.pad_id,
             prefix_sharing=args.prefix_sharing, preemption=args.preemption,
             spec_decode=args.spec_decode, draft_k=args.draft_k,

@@ -29,6 +29,7 @@ __all__ = [
     "decode_attention",
     "paged_decode_attention",
     "paged_verify_attention",
+    "paged_chunk_prefill_attention",
     "seed_kv_cache",
 ]
 
@@ -486,3 +487,30 @@ def paged_verify_attention(
     out = jnp.concatenate(outs, axis=1)          # (B, S, H, hd)
     out = L.dense(out.reshape(B, S, n_heads * hd), p.wo, cfg)
     return out, (new_k, new_v)
+
+
+def paged_chunk_prefill_attention(*args, **kwargs):
+    """Chunk-prefill attention: score one chunk of a prompt at cache
+    positions ``cur_len[b] + j`` while reading the already-prefilled prefix
+    *through the block table* — the attention seam of chunked prefill.
+
+    This IS ``paged_verify_attention``: the verify pass already does exactly
+    what a prefill chunk needs (scatter the chunk's K/V through the table
+    first — sentinel-tail entries of a partially-filled table drop the
+    writes — then attend each position with its own causal horizon
+    ``kv_len = cur_len + j + 1``), and because every position reuses the
+    decode oracle's instruction sequence, a chunked prefill is bit-identical
+    to the fused one-shot prefill by construction, not by numerical
+    accident.  Padding positions past the chunk's real length write garbage
+    K/V *inside* the row's own allocated blocks only; those positions are
+    overwritten by the next chunk's scatter-before-gather (or by decode's
+    write-before-attend at position ``prompt_len``) before any horizon can
+    read them — the same PR-6 write-skip discipline that makes partial
+    tables safe.
+
+    Both session attention impls route chunk reads through this gather path:
+    the Pallas paged-attention kernel's tile schedule is single-query, and
+    gather/pallas greedy parity is already pinned, so a pallas session
+    chunk-prefills through gather and decodes through the kernel without
+    breaking the exactness contract."""
+    return paged_verify_attention(*args, **kwargs)

@@ -45,6 +45,7 @@ __all__ = [
     "decode_step",
     "paged_decode_step",
     "paged_verify_step",
+    "paged_chunk_prefill_step",
     "FFNParams",
 ]
 
@@ -617,6 +618,51 @@ def paged_verify_step(
         body, x, (params["layers"], cache["k"], cache["v"]), cfg.scan_layers
     )
     return _head(cfg, params, x), {"k": k_new, "v": v_new}
+
+
+def paged_chunk_prefill_step(
+    cfg: ModelConfig,
+    params: Dict[str, Any],
+    cache: Dict[str, jax.Array],
+    batch: Dict[str, jax.Array],
+    prefill_pos: jax.Array,             # (B,) cursor: tokens already prefilled
+    block_tables: jax.Array,            # (B, W) int32, sentinel-tailed
+    *,
+    block_size: int,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Chunked-prefill step: teacher-force one (B, C) chunk of each row's
+    prompt into the paged cache at positions ``[prefill_pos, prefill_pos +
+    C)``, reading the already-written prefix *through the block table*.
+
+    This IS ``paged_verify_step`` — the verify pass already has the exact
+    semantics a prefill chunk needs (scatter this chunk's K/V through the
+    table before any gather; attend each position at its own causal
+    horizon), and reusing it makes the chunked prefill bit-identical to the
+    fused one-shot prefill by construction: ``logits[:, j]`` of the final
+    chunk's last real position is bitwise the fused prefill's last-position
+    logits, and the pool K/V after the final chunk is bitwise the
+    one-shot-scattered pool (pinned by ``tests/test_chunked_prefill.py``).
+
+    Contract for partial tables (the PR-6 invariant the chunks lean on):
+
+    * table entries covering ``[0, prefill_pos + C)`` must name real blocks;
+      *tail* entries may still be the sentinel ``num_blocks`` — the scatter
+      drops writes through them, and positions ``>= kv_len`` never enter any
+      horizon, so an unallocated tail is indistinguishable from an absent
+      one;
+    * rows padded past their real chunk length write garbage K/V only at
+      positions ``>= prefill_pos + chunk_len`` inside their own blocks —
+      overwritten by the next chunk's scatter-before-gather or by decode's
+      write-before-attend, and masked by ``kv_len`` until then.
+
+    Same family gates as the verify pass: attention families only, and moe
+    is excluded because its routing is capacity-coupled across the token
+    batch (a chunked prefill would route differently than the fused
+    oracle)."""
+    return paged_verify_step(
+        cfg, params, cache, batch, prefill_pos, block_tables,
+        block_size=block_size,
+    )
 
 
 def cache_max_len(cfg: ModelConfig, cache) -> int:

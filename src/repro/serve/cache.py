@@ -45,6 +45,32 @@ Host-side bookkeeping lives in ``SlotPool`` (decode-row free list),
 ``BlockPool`` (KV-block free list — both min-heaps with O(1) membership)
 and ``PromptBuckets`` (fixed prompt-length buckets so prefill compiles once
 per bucket, never per request length).
+
+**Partial-table invariants (chunked prefill, PR 10).**  A block table is
+valid at ANY prefix of its final contents: entries ``[0, ceil(pos / bs))``
+map real blocks holding the first ``pos`` written positions, everything
+after is the ``num_blocks`` sentinel.  Three properties make a partially
+built table safe to serve and to keep extending, all pinned by
+tests/test_chunked_prefill.py:
+
+* **sentinel writes drop** — every K/V scatter routes through
+  ``where(blk < W, phys, num_blocks)``-style clamping, so a write whose
+  position falls past the allocated prefix lands in the pool's dump row
+  ``num_blocks`` and is never read;
+* **reads never cross ``kv_len``** — attention masks keys at the caller's
+  ``cur_len``/``kv_len``, so sentinel-tailed entries (and any garbage
+  between a chunk's end and the next write) are invisible: a table with a
+  sentinel tail serves reads identically to a truncated context;
+* **scatter-before-gather** — a chunk writes its own K/V before attending,
+  so position ``pos`` is readable the moment ``kv_len`` reaches it, and
+  the next chunk (or decode step) may immediately read through the same
+  table row it just extended.
+
+The scheduler grows a mid-prefill row's table one chunk at a time
+(``_ensure_blocks`` up to the chunk's last write) and scrubs that row to
+all-sentinel in every decode dispatch until the prefill completes — decode
+ticks write unconditionally at ``cur_len``, and the scrub is what keeps
+those writes off the row's already-written prompt K/V.
 """
 from __future__ import annotations
 

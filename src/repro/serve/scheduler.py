@@ -138,6 +138,7 @@ from repro.models.transformer import (
     forward,
     init_cache,
     init_paged_cache,
+    paged_chunk_prefill_step,
     paged_decode_step,
     paged_verify_step,
 )
@@ -588,6 +589,56 @@ _admit_fused_paged_jit = _LazyJit(lambda: jax.jit(
 ))
 
 
+def _prefill_chunk(
+    cfg: ModelConfig,
+    params,
+    cache,
+    tokens: jax.Array,         # (A, C_bucket) int32, right-padded chunk tokens
+    starts: jax.Array,         # (A,) int32 prefill cursor (position of tokens[:, 0])
+    chunk_lens: jax.Array,     # (A,) int32 real tokens this chunk
+    tables: jax.Array,         # (A, W) int32 per-row block tables, sentinel-tailed
+    req_ids: jax.Array,        # (A,) int32
+    base_key: jax.Array,       # (2,) uint32 session key
+    *,
+    sampling: SamplingConfig,
+    block_size: int,
+):
+    """Chunked prefill: teacher-force one chunk of each row's prompt into
+    the paged pool at positions ``[starts, starts + chunk_lens)``, reading
+    the already-written prefix through the block table (see
+    ``paged_chunk_prefill_step`` — bit-identical to the fused one-shot
+    prefill by construction).  Padding rows carry all-sentinel tables, so
+    their writes are dropped like ``_admit_fused_paged``'s; no ``valid``
+    mask is needed and 1..A chunks share the program (compiled once per
+    (admit width, chunk bucket) — the same ``{1,2,4,...} x buckets``
+    program set as the one-shot path, so chunking adds no shapes).
+
+    ``tok0s`` is each row's first sampled token *assuming this is its final
+    chunk*: the key folds in ``starts + chunk_lens``, which equals the
+    effective prompt length exactly when the chunk completes the prompt —
+    the same positional key the one-shot path folds — and is garbage the
+    host ignores for non-final chunks."""
+    logits, cache = paged_chunk_prefill_step(
+        cfg, params, cache, {"tokens": tokens}, starts, tables,
+        block_size=block_size,
+    )
+    last = jnp.take_along_axis(
+        logits, (chunk_lens - 1)[:, None, None], axis=1
+    )[:, 0, :]
+    cache = _pin_pool(cache)
+    req_keys = _request_keys(base_key, req_ids)
+    tok0s = _sh_constrain(
+        _first_tokens(last, req_keys, starts + chunk_lens, sampling), (None,)
+    )
+    return cache, tok0s, _sh_constrain(req_keys, (None, None))
+
+
+_prefill_chunk_jit = _LazyJit(lambda: jax.jit(
+    _prefill_chunk, static_argnames=("cfg", "sampling", "block_size"),
+    donate_argnames=_resolve_cache_donation(),
+))
+
+
 def _evict(cache, slot: jax.Array):
     return C.evict_slot(cache, slot)
 
@@ -679,6 +730,7 @@ def scheduler_compile_stats() -> Dict[str, int]:
         "admit_fused": _jit_cache_size(_admit_fused_jit),
         "admit_decode": _jit_cache_size(_admit_decode_jit),
         "admit_paged": _jit_cache_size(_admit_fused_paged_jit),
+        "prefill_chunk": _jit_cache_size(_prefill_chunk_jit),
         "admit_merge": _jit_cache_size(_admit_merge_jit),
         "evict": _jit_cache_size(_evict_jit),
         "copy_block": _jit_cache_size(_copy_block_jit),
@@ -716,6 +768,10 @@ class CompletedRequest:
     # quality tiers: the EFFECTIVE rung the request was served at (requested
     # rung, possibly demoted by the load shedder); "" when tiers are off
     tier: str = ""
+    # time-to-first-token in scheduler ticks since arrival (the same sample
+    # appended to SchedulerStats.ttft_ticks — kept per-request here so
+    # benches can split TTFT by request class); -1 if never recorded
+    ttft: int = -1
 
     @property
     def full_sequence(self) -> np.ndarray:
@@ -755,16 +811,21 @@ class SchedulerStats:
                             "including each request's admit-time first token",
         "admit_calls": "batched prefill dispatches (one per admission "
                        "batch, covering 1..num_slots requests)",
-        "prefills": "prompt-bucket size -> requests prefilled at that "
-                    "bucket (each request's OWN effective-prompt bucket — "
-                    "replayed preemption victims count at their longer "
-                    "replay bucket — not the admit batch's padding bucket)",
+        "prefills": "prompt-bucket size -> prefill dispatches charged at "
+                    "that bucket (each request's OWN effective-prompt "
+                    "bucket — replayed preemption victims count at their "
+                    "longer replay bucket — not the admit batch's padding "
+                    "bucket; under chunked prefill every CHUNK counts at "
+                    "its own chunk bucket, so one long request contributes "
+                    "several entries)",
         "peak_active": "max concurrently-resident requests",
         "peak_blocks_in_use": "paged layout: max KV pool blocks held at "
                               "once",
         "ttft_ticks": "per-request time-to-first-token in scheduler ticks "
                       "since the request's arrival (queue wait + prefill), "
-                      "appended at admit",
+                      "appended at admit — under chunked prefill, at the "
+                      "FINAL chunk's dispatch, when the first token is "
+                      "actually sampled",
         "latency_ticks": "per-request total latency in scheduler ticks "
                          "since arrival, appended at finish",
         "prefill_tokens": "bucketed prompt tokens admitted (the device "
@@ -780,7 +841,10 @@ class SchedulerStats:
                                 "between a resident request's consecutive "
                                 "accepted tokens (<= steps_per_tick + "
                                 "ceil(prefill_decode_ratio * "
-                                "steps_per_tick) under the ratio policy)",
+                                "steps_per_tick) under the ratio policy; "
+                                "chunked prefill tightens the per-item "
+                                "budget overshoot from one prompt bucket "
+                                "to one chunk — docs/serving.md)",
         "host_block_s": "wall seconds the host spent blocked on device "
                         "token transfers (np.asarray of chunk outputs)",
         "wall_s": "wall seconds spent inside step() in total",
@@ -858,6 +922,11 @@ class SchedulerStats:
                            "EFFECTIVE ladder rung (the rung each request "
                            "was admitted at, post-shedding); empty when "
                            "tiers are off",
+        "prefill_chunks": "chunked prefill: partial-prompt chunk rows "
+                          "dispatched (each long request contributes "
+                          "ceil(effective_prompt / prefill_chunk) rows; 0 "
+                          "when chunking is off or every prompt fits one "
+                          "chunk)",
     }
 
     ticks: int = 0
@@ -895,6 +964,7 @@ class SchedulerStats:
     tier_restorations: int = 0
     shed_level: int = 0
     active_per_tier: Dict[str, int] = dataclasses.field(default_factory=dict)
+    prefill_chunks: int = 0
 
     @property
     def accept_rate(self) -> float:
@@ -962,6 +1032,23 @@ class _ActiveSlot:
     # frozen at admission (preemption replays re-admit at the same rung so
     # the replay stays bit-identical)
     tier_idx: int = 0
+    # chunked prefill: the resident-but-still-prefilling cursor.  A chunked
+    # row holds its slot and grows its block table chunk by chunk;
+    # `prefill_pos` counts effective-prompt tokens already dispatched and
+    # `eff_prompt` caches the effective prompt (prompt + replayed accepted
+    # tokens).  One-shot admits leave both at 0/None, so `prefilling` is
+    # False for every non-chunked row.
+    prefill_pos: int = 0
+    prefill_len: int = 0
+    eff_prompt: Optional[np.ndarray] = None
+    # per-request TTFT sample (ticks since arrival), -1 until the first
+    # token is dispatched — survives preemption via the resume snapshot so
+    # each request is sampled exactly once
+    ttft: int = -1
+
+    @property
+    def prefilling(self) -> bool:
+        return self.prefill_pos < self.prefill_len
 
 
 @dataclasses.dataclass
@@ -1077,6 +1164,8 @@ class ServeSession:
         loop: str = "async",
         prefill_decode_ratio: Optional[float] = None,
         prefill_token_budget: Optional[int] = None,
+        chunked_prefill: bool = False,
+        prefill_chunk: Optional[int] = None,
         attn_impl: str = "gather",
         pad_id: int = 0,
         prefix_sharing: bool = False,
@@ -1303,6 +1392,62 @@ class ServeSession:
             raise ValueError(
                 f"largest prompt bucket {self.buckets.max_size} > max_len {self.max_len}"
             )
+        # -- chunked prefill --------------------------------------------------
+        # Split one prompt's prefill into prefill_chunk-wide chunks dispatched
+        # across successive scheduler steps (resumed through _prefilling), so
+        # a long prompt never monopolizes a tick and the interleaving budget
+        # meters chunks, not whole buckets.  v1 composes with preemption (a
+        # replayed victim's long recompute is itself chunked) but not with
+        # the features below — each gated with its reason.
+        if prefill_chunk is not None and not chunked_prefill:
+            raise ValueError("prefill_chunk requires chunked_prefill=True")
+        if chunked_prefill:
+            if cache_layout != "paged":
+                raise ValueError(
+                    "chunked prefill resumes a partially-written block table "
+                    'across ticks — it requires cache_layout="paged" (the '
+                    "slot layout has no sentinel-tailed table to grow)"
+                )
+            if cfg.family == "moe":
+                raise ValueError(
+                    "chunked prefill teacher-forces chunk tokens through a "
+                    "batched pass; moe routing is capacity-coupled across "
+                    "the token batch, so chunks would route differently "
+                    "than the fused prefill oracle and lose the exactness "
+                    "contract"
+                )
+            if spec_decode:
+                raise ValueError(
+                    "chunked prefill and spec_decode both repurpose the "
+                    "multi-position verify pass with different per-tick "
+                    "schedules — composing them is a ROADMAP follow-on; "
+                    "set at most one"
+                )
+            if tiers is not None:
+                raise ValueError(
+                    "chunked prefill dispatches chunk batches outside the "
+                    "per-rung admit grouping — composing it with quality "
+                    "tiers is a ROADMAP follow-on"
+                )
+            if prefix_sharing:
+                raise ValueError(
+                    "prefix sharing publishes prompt blocks at admission, "
+                    "but a chunk-prefilled block is written ticks after its "
+                    "table entry exists — a sharer could map it before its "
+                    "K/V lands; publish-at-chunk-boundary is a ROADMAP "
+                    "follow-on"
+                )
+            if prefill_chunk is None:
+                prefill_chunk = self.buckets.max_size
+            if prefill_chunk not in self.buckets.sizes:
+                raise ValueError(
+                    f"prefill_chunk {prefill_chunk} must be one of the "
+                    f"prompt buckets {self.buckets.sizes} — chunk widths are "
+                    "drawn from the bucket set so the compiled program set "
+                    "stays (admit widths x buckets)"
+                )
+        self.chunked = bool(chunked_prefill)
+        self.prefill_chunk = int(prefill_chunk) if chunked_prefill else 0
         self.pool = C.SlotPool(num_slots)
         self.num_slots = num_slots
         self.cache_dtype = jnp.dtype(cache_dtype).name
@@ -1440,6 +1585,11 @@ class ServeSession:
         self._last_emit_work = np.zeros((num_slots,), np.int64)
         # prefill-token residue below one work tick (carried, not ceil'd)
         self._prefill_carry = 0
+        # chunked prefill: resident rows whose prompt is still being written,
+        # FIFO between the arrival heap and the decoding set — each step
+        # resumes their next chunk (budget permitting) BEFORE admitting new
+        # work, so in-flight prefills finish first and bound their own TTFT
+        self._prefilling: List[_ActiveSlot] = []
 
     # -- queue ---------------------------------------------------------------
 
@@ -1484,13 +1634,13 @@ class ServeSession:
             raise ValueError(f"request {rid}: empty prompt")
         if max_new < 1:
             raise ValueError(f"request {rid}: max_new must be >= 1, got {max_new}")
-        if prompt.size > self.buckets.max_size:
+        if prompt.size > self.buckets.max_size and not self.chunked:
             raise ValueError(
                 f"request {rid}: prompt_len {prompt.size} exceeds the largest "
                 f"prompt bucket {self.buckets.max_size} (buckets "
-                f"{self.buckets.sizes}) — split the prompt or widen the buckets"
+                f"{self.buckets.sizes}) — split the prompt, widen the "
+                "buckets, or enable chunked_prefill"
             )
-        bucket = self.buckets.bucket(prompt.size)
         # strict `>`: the exact-fill boundary prompt_len + max_new == max_len
         # IS admissible — the last cache write lands at position
         # prompt_len + max_new - 2 <= max_len - 2 (the final token is
@@ -1498,11 +1648,23 @@ class ServeSession:
         # clamp at max_len - 1 is never binding before the row finishes.
         # Pinned for both layouts by tests/test_scheduler.py
         # (test_exact_fill_boundary_admits_and_completes).
-        if max(bucket, prompt.size + max_new) > self.max_len:
-            raise ValueError(
-                f"request {rid}: prompt_len {prompt.size} + max_new {max_new} "
-                f"(bucket {bucket}) exceeds cache max_len {self.max_len}"
-            )
+        if prompt.size > self.buckets.max_size:
+            # chunked-only admission: no single bucket pads this prompt —
+            # every chunk pads to its own chunk bucket and writes stay
+            # within the prompt's blocks, so only the raw context binds
+            if prompt.size + max_new > self.max_len:
+                raise ValueError(
+                    f"request {rid}: prompt_len {prompt.size} + max_new "
+                    f"{max_new} exceeds cache max_len {self.max_len}"
+                )
+        else:
+            bucket = self.buckets.bucket(prompt.size)
+            if max(bucket, prompt.size + max_new) > self.max_len:
+                raise ValueError(
+                    f"request {rid}: prompt_len {prompt.size} + max_new "
+                    f"{max_new} (bucket {bucket}) exceeds cache max_len "
+                    f"{self.max_len}"
+                )
         if self.layout == "paged":
             worst = self._worst_blocks(prompt.size, max_new)
             if worst > self.num_blocks:
@@ -1520,7 +1682,10 @@ class ServeSession:
                     f"copy-on-write fork) but the pool only has "
                     f"{self.num_blocks} — it could never be admitted"
                 )
-            if self.preempt and prompt.size + max_new - 1 > self.buckets.max_size:
+            # with chunking the replay prompt needs no single bucket — its
+            # chunks each pad to a chunk bucket, like any long prompt
+            if (self.preempt and not self.chunked
+                    and prompt.size + max_new - 1 > self.buckets.max_size):
                 raise ValueError(
                     f"request {rid}: preemption replays prompt + accepted "
                     f"tokens through the bucketed prefill — its replay "
@@ -1562,10 +1727,10 @@ class ServeSession:
         of a still-resident row the same way)."""
         if self.policy == "sjf":
             # shortest job first: expected residency = generation budget +
-            # bucketed prefill cost
+            # bucketed prefill cost (summed over chunks when chunking)
             if eff_len is None:
                 eff_len = int(self._eff_prompt(req).size)
-            return req.max_new + self.buckets.bucket(eff_len)
+            return req.max_new + self._prefill_cost(eff_len)
         if self.policy == "fifo":
             return 0
         return req.priority
@@ -1583,6 +1748,45 @@ class ServeSession:
         never written), and prefill occupies ``[0, prompt_len)`` — bucket
         right-padding past the last prompt block is dropped, never stored."""
         return -(-(prompt_len + max_new - 1) // self.block_size)
+
+    # -- chunked-prefill planning --------------------------------------------
+
+    def _chunks_prefill(self, eff_len: int) -> bool:
+        """Whether a prompt of this effective length takes the chunked path.
+        Prompts that fit one chunk keep the one-shot ``_admit_many`` path —
+        identical dispatch to an unchunked session, which is what lets the
+        parity oracle share every short-prompt program."""
+        return self.chunked and eff_len > self.prefill_chunk
+
+    def _chunk_spans(self, eff_len: int) -> List[int]:
+        """Deterministic host-side chunk plan: ``prefill_chunk``-wide spans
+        plus a remainder.  Each span dispatches at its own bucket
+        (``bucket(span) <= prefill_chunk``), so every chunk shape is already
+        in the warmed (admit width x bucket) program set."""
+        spans, pos = [], 0
+        while pos < eff_len:
+            s = min(self.prefill_chunk, eff_len - pos)
+            spans.append(s)
+            pos += s
+        return spans
+
+    def _prefill_cost(self, eff_len: int) -> int:
+        """Bucketed prefill tokens this prompt will charge in total — the
+        one-shot bucket, or the sum of chunk buckets when chunking (used by
+        SJF ranking and victim selection; safe past ``buckets.max_size``,
+        where ``bucket()`` itself would raise)."""
+        if not self._chunks_prefill(eff_len):
+            return self.buckets.bucket(eff_len)
+        return sum(self.buckets.bucket(s) for s in self._chunk_spans(eff_len))
+
+    def _head_charge(self, eff_len: int) -> int:
+        """Tokens the interleaving budget charges when this request admits
+        THIS step: the first chunk's bucket on the chunked path (later
+        chunks are charged step by step from the resume queue), else the
+        whole one-shot bucket."""
+        if self._chunks_prefill(eff_len):
+            return self.prefill_chunk
+        return self.buckets.bucket(eff_len)
 
     # -- prefix sharing / preemption helpers ---------------------------------
 
@@ -1648,8 +1852,13 @@ class ServeSession:
         zeroed table row makes any in-flight writes sentinel-dropped), and
         push the original request back on the ready queue."""
         state.preempted = True
+        # the 4th element carries the first-token latency across the
+        # eviction: ttft is counted exactly once per request, and a
+        # mid-prefill victim (chunked path, ttft still unsampled) gets its
+        # ttft at the REPLAY's final chunk instead
         self._preempt_resume[state.req.req_id] = (
-            list(state.tokens), state.admitted_tick, state.tier_idx
+            list(state.tokens), state.admitted_tick, state.tier_idx,
+            state.ttft,
         )
         self._release_resources(state)
         self._push_ready(state.req)
@@ -1912,21 +2121,31 @@ class ServeSession:
                 resume = self._preempt_resume.pop(req.req_id, None)
                 if resume is None:
                     self.stats.admitted += 1
-                    self.stats.ttft_ticks.append(self.clock - req.arrival)
                     state = _ActiveSlot(req, slot, [], self.clock,
                                         tier_idx=tier_idx)
+                    state.ttft = self.clock - req.arrival
+                    self.stats.ttft_ticks.append(state.ttft)
                 else:
                     # re-admission after preemption: the request keeps its
                     # accepted tokens and original admit tick — admitted/
-                    # ttft were already counted at first admit
+                    # ttft were already counted at first admit (a chunked
+                    # victim evicted mid-prefill carries ttft < 0 and
+                    # samples it now, on the replay that reaches a token)
                     state = _ActiveSlot(req, slot, list(resume[0]), resume[1],
                                         tier_idx=tier_idx)
+                    state.ttft = resume[3]
+                    if state.ttft < 0:
+                        state.ttft = self.clock - req.arrival
+                        self.stats.ttft_ticks.append(state.ttft)
                 state.pending_first = True
                 self._slot_tier[slot] = tier_idx
                 self._bump_tier_gauge(tier_idx, +1)
                 self._active[slot] = state
                 states.append(state)
-            self._pending_tok0.append((states, tok0s))
+            # row indices into tok0s travel with the states: a chunked
+            # dispatch merges only its FINAL rows, so the harvest needs to
+            # know which tok0 row belongs to which state
+            self._pending_tok0.append((states, tok0s, list(range(len(states)))))
             return
 
         # the sync loop blocks here until the prefill program completes —
@@ -1946,12 +2165,17 @@ class ServeSession:
             resume = self._preempt_resume.pop(req.req_id, None)
             if resume is None:
                 self.stats.admitted += 1
-                self.stats.ttft_ticks.append(self.clock - req.arrival)
                 state = _ActiveSlot(req, slot, [tok0], self.clock,
                                     tier_idx=tier_idx)
+                state.ttft = self.clock - req.arrival
+                self.stats.ttft_ticks.append(state.ttft)
             else:
                 state = _ActiveSlot(req, slot, list(resume[0]) + [tok0],
                                     resume[1], tier_idx=tier_idx)
+                state.ttft = resume[3]
+                if state.ttft < 0:
+                    state.ttft = self.clock - req.arrival
+                    self.stats.ttft_ticks.append(state.ttft)
             self._slot_tier[slot] = tier_idx
             self._bump_tier_gauge(tier_idx, +1)
             self.stats.generated_tokens += 1
@@ -1981,6 +2205,10 @@ class ServeSession:
         overwrite the exposed positions."""
         state.released = True
         self._bump_tier_gauge(state.tier_idx, -1)
+        if state.prefilling:
+            # a mid-prefill victim leaves the resume queue with its slot —
+            # the replay restarts the chunk plan from position 0
+            self._prefilling = [s for s in self._prefilling if s is not state]
         if self._active[state.slot] is state:   # a successor may already own it
             self._active[state.slot] = None
         self.pool.release(state.slot)
@@ -2009,6 +2237,7 @@ class ServeSession:
             admitted_tick=state.admitted_tick,
             finished_tick=self.clock,
             tier=self.tiers[state.tier_idx] if self.tiers is not None else "",
+            ttft=state.ttft,
         )
 
     def _ensure_blocks(self, slot: int, hi: int) -> None:
@@ -2038,6 +2267,15 @@ class ServeSession:
         return sum(s is not None for s in self._active)
 
     @property
+    def n_decoding(self) -> int:
+        """Resident rows actually decoding — mid-prefill rows (chunked
+        path) hold a slot but join no decode chunk, so they neither starve
+        nor scale the interleaving budget."""
+        return sum(
+            s is not None and not s.prefilling for s in self._active
+        )
+
+    @property
     def drained(self) -> bool:
         return not (
             self._pending or self._ready or self.n_active or self._inflight
@@ -2056,11 +2294,11 @@ class ServeSession:
         therefore waits at most until the resident decodes finish)."""
         if self.prefill_decode_ratio is None and self.prefill_token_budget is None:
             return float("inf")
-        if self.n_active == 0:
+        if self.n_decoding == 0:
             return float("inf")
         if self.prefill_token_budget is not None:
             return float(self.prefill_token_budget)
-        return self.prefill_decode_ratio * self.n_active * self.steps_per_tick
+        return self.prefill_decode_ratio * self.n_decoding * self.steps_per_tick
 
     def _pop_admissible(
         self, budget: float = float("inf")
@@ -2094,8 +2332,14 @@ class ServeSession:
                     # (prefix hits only shrink it; cache-only published
                     # blocks count as free because reclaim evicts them on
                     # demand) — mid-decode appends are funded by reclaim and
-                    # preemption instead of a worst-case reservation
-                    need = -(-eff_len // self.block_size)
+                    # preemption instead of a worst-case reservation.  A
+                    # chunked admission's immediate need is its FIRST
+                    # chunk's blocks; later chunks append like decode does
+                    head = (
+                        min(eff_len, self.prefill_chunk)
+                        if self._chunks_prefill(eff_len) else eff_len
+                    )
+                    need = -(-head // self.block_size)
                     if pending_need + need > (
                         self.blocks.free_count + reclaimable
                     ):
@@ -2116,13 +2360,13 @@ class ServeSession:
                         pass
                     if worst > self.blocks.free_count - self._reserved_total:
                         break
-            b = self.buckets.bucket(eff_len)
+            b = self._head_charge(eff_len)
             if b > budget:
                 stalled = True
                 break
             if self.layout == "paged":
                 if self.preempt:
-                    pending_need += -(-eff_len // self.block_size)
+                    pending_need += -(-head // self.block_size)
                 else:
                     self._reserved_total += worst
             budget -= b
@@ -2156,22 +2400,242 @@ class ServeSession:
     def _admit_phase(self) -> None:
         """Admit ready requests in policy order, subject to free slots,
         (paged) the block-pool reservation, and the interleaving budget —
-        shared across every admission batch of this step."""
+        shared across every admission batch of this step.  Chunked prefill:
+        resident mid-prefill rows spend the budget FIRST (oldest prefill
+        first, no skip-ahead — a stalled resident chunk also closes
+        admission for the step), so every started prefill finishes before
+        new prompts open and the budget bounds each step's prefill work by
+        one chunk bucket per row instead of one prompt bucket."""
         budget = self._prefill_budget()
         stalled = False
-        while self._ready and self.pool.free_count:
+        if self._prefilling:
+            budget, stalled = self._resume_chunks(budget)
+        while not stalled and self._ready and self.pool.free_count:
             batch, budget, st = self._pop_admissible(budget)
             stalled = stalled or st
             if not batch:
                 break                 # head doesn't fit the pool/budget yet
             if self.tiers is None:
-                self._admit_many(batch)   # sync loop: may free slots again
+                chunked = [
+                    r for r in batch
+                    if self._chunks_prefill(int(self._eff_prompt(r).size))
+                ]
+                oneshot = [r for r in batch if r not in chunked]
+                if oneshot:
+                    self._admit_many(oneshot)  # sync: may free slots again
+                if chunked:
+                    started = [self._start_chunked(r) for r in chunked]
+                    # first chunk dispatches the same step the budget was
+                    # charged for it (_head_charge); later chunks resume
+                    # above on subsequent steps
+                    self._dispatch_chunks(started)
             else:
                 for t, group in self._group_by_tier(batch):
                     self._admit_many(group, tier_idx=t)
         if stalled:
             self.stats.prefill_stall_ticks += 1
         self.stats.peak_active = max(self.stats.peak_active, self.n_active)
+
+    def _resume_chunks(self, budget: float) -> Tuple[float, bool]:
+        """Dispatch the next chunk for every resident mid-prefill row the
+        budget covers, in start order (FIFO, no skip-ahead: a stalled head
+        blocks younger rows' chunks, which is what keeps each prefill's
+        finish time bounded).  One chunk per row per step — the decode
+        interleave between chunks is the whole point."""
+        rows: List[_ActiveSlot] = []
+        stalled = False
+        for state in list(self._prefilling):
+            clen = min(
+                self.prefill_chunk, state.prefill_len - state.prefill_pos
+            )
+            b = self.buckets.bucket(clen)
+            if b > budget:
+                stalled = True
+                break
+            budget -= b
+            rows.append(state)
+        if rows:
+            self._dispatch_chunks(rows)
+        return budget, stalled
+
+    def _start_chunked(self, req: Request) -> _ActiveSlot:
+        """Make a chunked admission resident WITHOUT prefilling anything
+        yet: acquire the slot, zero the table row (all-sentinel — blocks
+        are acquired chunk by chunk in ``_dispatch_chunks``), and park the
+        row on the resume queue with its cursor at 0.  Without preemption
+        the worst-case reservation ``_pop_admissible`` took stays
+        unconverted (``_future`` carries all of it) and ``_ensure_blocks``
+        converts per acquired block."""
+        eff = self._eff_prompt(req)
+        slot = self.pool.acquire()
+        self._tables[slot, :] = self.num_blocks
+        self._held[slot] = []
+        self._cur_len[slot] = 0
+        self._cl_true[slot] = 0
+        self._last_emit_work[slot] = self.stats.work_ticks
+        if not self.preempt:
+            self._future[slot] = self._worst_blocks(
+                req.prompt.size, req.max_new
+            )
+        resume = self._preempt_resume.pop(req.req_id, None)
+        if resume is None:
+            self.stats.admitted += 1
+            state = _ActiveSlot(req, slot, [], self.clock)
+        else:
+            # chunked replay of a preemption victim: accepted tokens are
+            # part of the effective prompt (``eff``) AND the resume token
+            # list — the final chunk's sampled token appends after them
+            state = _ActiveSlot(req, slot, list(resume[0]), resume[1])
+            state.ttft = resume[3]
+        state.prefill_pos = 0
+        state.prefill_len = int(eff.size)
+        state.eff_prompt = eff
+        self._slot_tier[slot] = 0
+        self._bump_tier_gauge(0, +1)
+        self._active[slot] = state
+        self._prefilling.append(state)
+        return state
+
+    def _dispatch_chunks(self, rows: List[_ActiveSlot]) -> None:
+        """ONE ``_prefill_chunk`` dispatch advancing every row in ``rows``
+        by its next chunk.  Rows pad to the admit-width x max-chunk-bucket
+        shape (program key: that pair — the warmed one-shot program
+        family), each row reading its already-written prefix through its
+        block table and scattering this chunk's K/V into freshly ensured
+        blocks.  Rows that reach the end of their prompt sample their
+        first token in-program (same key/position fold as the one-shot
+        admit) and join the decode set; for the others the sampled token
+        is garbage the host never reads."""
+        A = self._admit_width(len(rows))
+        clens = [
+            min(self.prefill_chunk, s.prefill_len - s.prefill_pos)
+            for s in rows
+        ]
+        cb = max(self.buckets.bucket(c) for c in clens)
+        toks = np.full((A, cb), self.pad_id, np.int32)
+        starts = np.zeros((A,), np.int32)
+        chunk_lens = np.ones((A,), np.int32)
+        req_ids = np.zeros((A,), np.int32)
+        tables = np.full(
+            (A, self._tables.shape[1]), self.num_blocks, np.int32
+        )
+        for i, (state, clen) in enumerate(zip(rows, clens)):
+            if state.released or state.preempted:
+                # evicted by an earlier row's _ensure_blocks this very
+                # loop: its table row stays all-sentinel (chunk writes
+                # drop) and its cursor is left for the replay
+                continue
+            slot, pos = state.slot, state.prefill_pos
+            self._ensure_blocks(slot, pos + clen - 1)
+            toks[i, :clen] = state.eff_prompt[pos:pos + clen]
+            starts[i] = pos
+            chunk_lens[i] = clen
+            req_ids[i] = state.req.req_id
+            tables[i] = self._tables[slot]
+        self.stats.peak_blocks_in_use = max(
+            self.stats.peak_blocks_in_use, self.blocks.busy_count
+        )
+        self.stats.peak_block_bytes_per_device = (
+            self.stats.peak_blocks_in_use * self._block_bytes_dev
+        )
+        self.cache, tok0s, req_keys = _prefill_chunk_jit(
+            cfg=self.cfg, params=self.params, cache=self.cache,
+            tokens=toks, starts=starts, chunk_lens=chunk_lens,
+            tables=tables, req_ids=req_ids, base_key=self._base_key,
+            sampling=self.sampling, block_size=self.block_size,
+        )
+        # per-chunk work charge: each chunk bills its OWN bucket, so
+        # prefill_tokens / work_ticks (and with them the starvation gauge)
+        # meter what the device actually ran this step — not the whole
+        # prompt at admission
+        tok_sum = 0
+        live = [
+            (i, s, c) for i, (s, c) in enumerate(zip(rows, clens))
+            if not (s.released or s.preempted)
+        ]
+        for _, _, clen in live:
+            b = self.buckets.bucket(clen)
+            self.stats.prefills[b] = self.stats.prefills.get(b, 0) + 1
+            tok_sum += b
+        self.stats.prefill_chunks += len(live)
+        self.stats.prefill_tokens += tok_sum
+        self._prefill_carry += tok_sum
+        self.stats.work_ticks += self._prefill_carry // self.num_slots
+        self._prefill_carry %= self.num_slots
+        finals: List[Tuple[int, _ActiveSlot]] = []
+        for i, state, clen in live:
+            state.prefill_pos += clen
+            self._cur_len[state.slot] = state.prefill_pos
+            self._cl_true[state.slot] = state.prefill_pos
+            if not state.prefilling:
+                finals.append((i, state))
+        for _, state in finals:
+            self._prefilling.remove(state)
+            self._last_emit_work[state.slot] = self.stats.work_ticks
+            if state.ttft < 0:
+                state.ttft = self.clock - state.req.arrival
+                self.stats.ttft_ticks.append(state.ttft)
+        if self.loop == "async":
+            if finals:
+                # merge ONLY the final rows' first tokens + keys into the
+                # device carry; mid-prefill rows stay out of the decode
+                # set, so their carry entries stay whatever they were.
+                # slots/valid align with the dispatch's tok0 rows, and the
+                # non-final rows borrow distinct unclaimed slot ids so the
+                # scatter stays collision-free (invalid rows rewrite what
+                # they gathered — see merge_admit_carry)
+                row_slot = {i: s.slot for i, s in finals}
+                rest = [
+                    s for s in range(self.num_slots)
+                    if s not in row_slot.values()
+                ]
+                slots = np.empty((A,), np.int32)
+                valid = np.zeros((A,), bool)
+                for i in range(A):
+                    if i in row_slot:
+                        slots[i] = row_slot[i]
+                        valid[i] = True
+                    else:
+                        slots[i] = rest.pop()
+                self._lt_dev, self._sk_dev = _admit_merge_jit(
+                    self._lt_dev, self._sk_dev, slots, tok0s, req_keys,
+                    valid,
+                )
+                for _, s in finals:
+                    s.pending_first = True
+                self._pending_tok0.append(
+                    ([s for _, s in finals], tok0s, [i for i, _ in finals])
+                )
+            return
+        if not finals:
+            return
+        tb = time.perf_counter()
+        tok0s = np.asarray(tok0s)
+        req_keys = np.asarray(req_keys, np.uint32)
+        self.stats.host_block_s += time.perf_counter() - tb
+        eos = self.sampling.eos_id
+        for i, state in finals:
+            slot, tok0 = state.slot, int(tok0s[i])
+            self._last_token[slot] = tok0
+            self._slot_keys[slot] = req_keys[i]
+            state.tokens.append(tok0)
+            self.stats.generated_tokens += 1
+            if (len(state.tokens) >= state.req.max_new
+                    or (eos >= 0 and tok0 == eos)):
+                self._finish(
+                    state, "eos" if (eos >= 0 and tok0 == eos) else "length"
+                )
+
+    def _decode_states(self) -> List[Optional[_ActiveSlot]]:
+        """The rows a decode chunk serves: ``_active`` with mid-prefill
+        rows masked to ``None`` — the chunk's tokens/advances for those
+        rows are garbage (their table rows were scrubbed at dispatch), and
+        the None mask makes every acceptance/advance loop skip them the
+        same way it skips empty slots."""
+        return [
+            None if (s is not None and s.prefilling) else s
+            for s in self._active
+        ]
 
     def _chunk_inputs(self):
         """Dispatch inputs shared by both loops: the active-row mask and
@@ -2189,7 +2653,9 @@ class ServeSession:
         if self.layout == "paged":
             bs = self.block_size
             for slot, state in enumerate(self._active):
-                if state is None:
+                if state is None or state.prefilling:
+                    # mid-prefill rows join no decode chunk: their blocks
+                    # grow in _dispatch_chunks, not here
                     continue
                 hi = min(
                     int(self._cur_len[slot]) + span,
@@ -2222,8 +2688,19 @@ class ServeSession:
                 self.stats.peak_blocks_in_use * self._block_bytes_dev
             )
             tables = self._tables.copy()
+            for slot, state in enumerate(self._active):
+                if state is not None and state.prefilling:
+                    # the decode tick writes K/V for EVERY row at its
+                    # cur_len; a mid-prefill row's real table holds
+                    # already-written prompt K/V a garbage decode write
+                    # would corrupt, so its row in the dispatched copy is
+                    # scrubbed to the sentinel (writes drop, like released
+                    # rows)
+                    tables[slot, :] = self.num_blocks
             block_size = self.block_size
-        active = np.asarray([s is not None for s in self._active], bool)
+        active = np.asarray(
+            [s is not None and not s.prefilling for s in self._active], bool
+        )
         return active, tables, block_size, steps
 
     def _accept_chunk(
@@ -2391,7 +2868,10 @@ class ServeSession:
         recovery)."""
         g = 0
         for slot, state in enumerate(self._active):
-            if state is None or state.done or state.released:
+            if (state is None or state.done or state.released
+                    or state.prefilling):
+                # mid-prefill rows haven't emitted yet — they are metered
+                # by ttft, not the decode gap
                 continue
             g = max(g, int(self.stats.work_ticks - self._last_emit_work[slot]))
         return g
@@ -2494,6 +2974,13 @@ class ServeSession:
             else:
                 self.clock += 1
             return self._drain_finished()
+        if self.n_decoding == 0:
+            # only mid-prefill rows resident: nothing to decode this step
+            # (their chunks were dispatched in _admit_phase); the clock
+            # still advances so ttft/latency stay meaningful and the next
+            # step keeps the chunks flowing
+            self.clock += 1
+            return self._drain_finished()
 
         active, tables, block_size, steps = self._chunk_inputs()
         if self.spec:
@@ -2516,7 +3003,7 @@ class ServeSession:
             self.stats.ticks += 1
             self.stats.work_ticks += k + 1
 
-            states = list(self._active)
+            states = self._decode_states()
             self._accept_spec_chunk(states, toks, n_acc, self.stats.work_ticks, k)
             for slot, state in enumerate(states):
                 if state is None:
@@ -2554,7 +3041,7 @@ class ServeSession:
         self.stats.ticks += steps
         self.stats.work_ticks += steps
 
-        states = list(self._active)
+        states = self._decode_states()
         self._accept_chunk(states, toks, steps, self.stats.work_ticks)
         for slot, state in enumerate(states):
             if state is None:
@@ -2602,7 +3089,7 @@ class ServeSession:
         self._admit_phase()
 
         prev, new = self._inflight, None
-        if self.n_active:
+        if self.n_decoding:
             active, tables, block_size, steps = self._chunk_inputs()
             if self.spec:
                 # the length carry is device-resident (_cl_dev): rows
@@ -2623,7 +3110,7 @@ class ServeSession:
                 self.clock += 1
                 self.stats.ticks += 1
                 self.stats.work_ticks += k + 1
-                new = _Inflight(toks_f, 1, list(self._active),
+                new = _Inflight(toks_f, 1, self._decode_states(),
                                 self.stats.work_ticks, n_acc=n_acc_f,
                                 draft_k=k)
                 self._cur_len = np.minimum(
@@ -2652,7 +3139,7 @@ class ServeSession:
                 self.clock += steps
                 self.stats.ticks += steps
                 self.stats.work_ticks += steps
-                new = _Inflight(toks_f, steps, list(self._active),
+                new = _Inflight(toks_f, steps, self._decode_states(),
                                 self.stats.work_ticks)
                 # advance the host view past the chunk just dispatched (the
                 # device carry advances identically; the clamp matches the
@@ -2660,6 +3147,11 @@ class ServeSession:
                 self._cur_len = np.minimum(
                     self._cur_len + steps * active, self.max_len - 1
                 ).astype(np.int32)
+        elif self.n_active:
+            # only mid-prefill rows resident: no decode chunk to dispatch
+            # (their chunks went out in _admit_phase); the clock still
+            # advances so the next step keeps the chunks flowing
+            self.clock += 1
         elif prev is None:
             # idle: jump to the next arrival instead of burning empty ticks
             if self._pending:
@@ -2687,12 +3179,14 @@ class ServeSession:
             toks = np.asarray(fl.toks)           # (steps, N)
         n_acc = np.asarray(fl.n_acc) if fl.n_acc is not None else None
         pend, self._pending_tok0 = self._pending_tok0, []
-        drained = [(states, np.asarray(t0s)) for states, t0s in pend]
+        drained = [
+            (states, np.asarray(t0s), idxs) for states, t0s, idxs in pend
+        ]
         self.stats.host_block_s += time.perf_counter() - tb
 
         eos = self.sampling.eos_id
-        for states, tok0s in drained:
-            for i, state in enumerate(states):
+        for states, tok0s, idxs in drained:
+            for state, i in zip(states, idxs):
                 state.pending_first = False
                 if state.preempted:
                     # preempted before its first token was harvested: the
@@ -2833,6 +3327,26 @@ class ServeSession:
                         )
                     jax.block_until_ready(out)
                     self.cache = out[0]
+                    if self.chunked:
+                        # chunk prefill dispatches at (admit width x chunk
+                        # bucket) with the session's fixed table width —
+                        # all-sentinel tables make every warmup write drop,
+                        # so state stays semantically untouched
+                        out = _prefill_chunk_jit(
+                            cfg=acfg, params=self.params, cache=self.cache,
+                            tokens=np.zeros((A, b), np.int32),
+                            starts=np.zeros((A,), np.int32),
+                            chunk_lens=np.ones((A,), np.int32),
+                            tables=np.full(
+                                (A, self._tables.shape[1]),
+                                self.num_blocks, np.int32,
+                            ),
+                            req_ids=req_ids, base_key=self._base_key,
+                            sampling=self.sampling,
+                            block_size=self.block_size,
+                        )
+                        jax.block_until_ready(out)
+                        self.cache = out[0]
             # the async admit-carry merge compiles once per admit width;
             # all-False valid keeps the device carry content intact.  tok0s
             # and keys are jnp arrays on purpose: the real calls pass admit-
